@@ -1,0 +1,237 @@
+"""Benchmark harness — one function per paper table/figure (§5), writing
+CSV blocks to stdout and ``results/benchmarks/*.csv``.
+
+Scaled for a single-core CPU container: 512 lanes, 8192-us windows, 1M-key
+universe; the qualitative claims (collapse/scaling/ordering) and calibrated
+ratios are the targets — see EXPERIMENTS.md §Paper-validation for the
+side-by-side versus the paper's numbers.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig11,fig20] [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import time
+
+import numpy as np
+
+from repro.core.sim import SimParams, make_streams, run_sim
+from repro.core.types import OpBatch, OpKind, SyncMode
+from repro.stores import PointerArray, RaceHash, SmartART
+from repro.workloads.ycsb import WORKLOADS, generate_ops
+
+OUT = "results/benchmarks"
+MODES = [SyncMode.OSYNC, SyncMode.SPIN, SyncMode.MCS, SyncMode.CIDER]
+N_KEYS = 1_000_000
+BASE = dict(n_lanes=512, ticks=8192, max_ops=1024)
+
+
+def _emit(name: str, header: str, rows: list[str]):
+    os.makedirs(OUT, exist_ok=True)
+    path = os.path.join(OUT, f"{name}.csv")
+    with open(path, "w") as f:
+        f.write(header + "\n" + "\n".join(rows) + "\n")
+    print(f"\n== {name} ==\n{header}")
+    for r in rows:
+        print(r)
+
+
+def _sweep(p: SimParams, workload: str, counts, modes=MODES, theta=None,
+           n_keys=N_KEYS):
+    streams = make_streams(p, WORKLOADS[workload], n_keys, theta=theta)
+    return {(m, nc): run_sim(p, m, streams, nc) for m in modes for nc in counts}
+
+
+def fig11_12_throughput_latency(fast=False):
+    """Figs 11+12: pointer array, 3 workloads x 4 schemes vs clients."""
+    counts = [48, 512] if fast else [16, 48, 128, 256, 512]
+    p = SimParams(**BASE)
+    for wl in ["write-intensive", "read-intensive", "write-only"]:
+        res = _sweep(p, wl, counts)
+        rows = [f"{nc}," + ",".join(
+            f"{res[(m, nc)].throughput_mops:.3f}" for m in MODES) +
+            "," + ",".join(f"{res[(m, nc)].p99_us:.0f}" for m in MODES)
+            for nc in counts]
+        _emit(f"fig11_{wl}", "clients," + ",".join(f"thr_{m.name}" for m in MODES)
+              + "," + ",".join(f"p99_{m.name}" for m in MODES), rows)
+
+
+def fig13_skew(fast=False):
+    """Fig 5/13: throughput vs Zipf theta at 512 clients."""
+    thetas = [0.0, 0.8, 0.99, 1.2] if fast else [0.0, 0.5, 0.8, 0.9, 0.99, 1.1, 1.2]
+    p = SimParams(**BASE)
+    rows = []
+    for th in thetas:
+        res = _sweep(p, "write-intensive", [512], theta=th)
+        rows.append(f"{th}," + ",".join(
+            f"{res[(m, 512)].throughput_mops:.3f}" for m in MODES))
+    _emit("fig13_skew", "theta," + ",".join(m.name for m in MODES), rows)
+
+
+def fig14_accuracy(fast=False):
+    """Fig 14: contention-aware identification accuracy at 512 clients."""
+    p = SimParams(**BASE)
+    streams = make_streams(p, WORKLOADS["write-intensive"], N_KEYS)
+    ideal = run_sim(p, SyncMode.OSYNC, streams, 512).ideal_pess_ratio
+    c = run_sim(p, SyncMode.CIDER, streams, 512)
+    comb_of_pess = c.wc_rate_global / max(c.pess_ratio, 1e-9)
+    _emit("fig14_accuracy",
+          "ideal_pess_ratio,cider_pess_ratio,combined_frac_of_pess",
+          [f"{ideal:.4f},{c.pess_ratio:.4f},{comb_of_pess:.3f}"])
+
+
+def fig15_params(fast=False):
+    """Fig 15: INITIAL_CREDIT / HOTNESS_THRESHOLD sensitivity (512 clients)."""
+    rows = []
+    for ic in ([8, 36] if fast else [2, 8, 36, 128]):
+        p = SimParams(**BASE, initial_credit=ic)
+        streams = make_streams(p, WORKLOADS["write-intensive"], N_KEYS)
+        r = run_sim(p, SyncMode.CIDER, streams, 512)
+        rows.append(f"initial_credit,{ic},{r.throughput_mops:.3f}")
+    for ht in ([2] if fast else [1, 2, 4]):
+        p = SimParams(**BASE, hotness_threshold=ht)
+        streams = make_streams(p, WORKLOADS["write-intensive"], N_KEYS)
+        r = run_sim(p, SyncMode.CIDER, streams, 512)
+        rows.append(f"hotness_threshold,{ht},{r.throughput_mops:.3f}")
+    _emit("fig15_params", "param,value,throughput_mops", rows)
+
+
+def fig16_19_race_smart(fast=False):
+    """Figs 16-19: end-to-end on RACE (2 bucket reads) and SMART (radix with
+    client path cache) index I/O profiles."""
+    counts = [48, 512] if fast else [48, 128, 512]
+    for name, idx_kw in [("race", dict(index_reads=2, index_bytes=128)),
+                         ("smart", dict(index_reads=1, index_bytes=64))]:
+        p = SimParams(**BASE, **idx_kw)
+        res = _sweep(p, "write-intensive", counts)
+        rows = [f"{nc}," + ",".join(
+            f"{res[(m, nc)].throughput_mops:.3f}" for m in MODES) +
+            "," + ",".join(f"{res[(m, nc)].p99_us:.0f}" for m in MODES)
+            for nc in counts]
+        _emit(f"fig16_{name}", "clients," +
+              ",".join(f"thr_{m.name}" for m in MODES) + "," +
+              ",".join(f"p99_{m.name}" for m in MODES), rows)
+
+
+def fig20_factor(fast=False):
+    """Fig 20: factor analysis (local WC disabled for O-SYNC/ShiftLock)."""
+    variants = [
+        ("OSYNC_noWC", SimParams(**BASE, local_wc=False), SyncMode.OSYNC),
+        ("ShiftLock_noWC", SimParams(**BASE, local_wc=False), SyncMode.MCS),
+        ("CIDER_woWC", SimParams(**BASE, wc_off=True), SyncMode.CIDER),
+        ("CIDER_woCAS", SimParams(**BASE, cas_off=True), SyncMode.CIDER),
+        ("CIDER", SimParams(**BASE), SyncMode.CIDER),
+    ]
+    rows = []
+    for name, p, mode in variants:
+        streams = make_streams(p, WORKLOADS["write-intensive"], N_KEYS)
+        r = run_sim(p, mode, streams, 512)
+        rows.append(f"{name},{r.throughput_mops:.3f},{r.p50_us:.0f},"
+                    f"{r.p99_us:.0f}")
+    _emit("fig20_factor", "variant,throughput_mops,p50_us,p99_us", rows)
+
+
+def fig21_wc_efficiency(fast=False):
+    """Fig 21: WC rate + batch size: local (MCS+WC) vs global (CIDER woCAS)
+    vs CIDER."""
+    rows = []
+    for name, p, mode in [
+            ("local_wc", SimParams(**BASE), SyncMode.MCS),
+            ("global_wc", SimParams(**BASE, cas_off=True), SyncMode.CIDER),
+            ("cider", SimParams(**BASE), SyncMode.CIDER)]:
+        streams = make_streams(p, WORKLOADS["write-intensive"], N_KEYS)
+        r = run_sim(p, mode, streams, 512)
+        rows.append(f"{name},{r.wc_rate:.3f},{r.avg_batch:.2f},"
+                    f"{r.throughput_mops:.3f}")
+    _emit("fig21_wc_efficiency", "mechanism,wc_rate,avg_batch,throughput", rows)
+
+
+def fig23_array_size(fast=False):
+    """Fig 23 (appendix): pointer-array size sweep at 512 clients."""
+    sizes = [64, 65536, 1_000_000] if fast else [1, 64, 4096, 65536, 1_000_000]
+    p = SimParams(**BASE)
+    rows = []
+    for n in sizes:
+        res = _sweep(p, "write-intensive", [512], n_keys=n)
+        rows.append(f"{n}," + ",".join(
+            f"{res[(m, 512)].throughput_mops:.3f}" for m in MODES))
+    _emit("fig23_array_size", "array_size," + ",".join(m.name for m in MODES),
+          rows)
+
+
+def fig24_value_size(fast=False):
+    """Fig 24 (appendix): value-size sweep (IOPS-bound => flat)."""
+    rows = []
+    for vb in [8, 64, 256]:
+        p = SimParams(**BASE, value_bytes=vb)
+        streams = make_streams(p, WORKLOADS["write-intensive"], N_KEYS)
+        for mode in ([SyncMode.OSYNC, SyncMode.CIDER] if True else MODES):
+            r = run_sim(p, mode, streams, 512)
+            rows.append(f"{vb},{mode.name},{r.throughput_mops:.3f}")
+    _emit("fig24_value_size", "value_bytes,mode,throughput_mops", rows)
+
+
+def table_engine_io(fast=False):
+    """Exact per-window I/O bill from the dataplane engine (closed-form
+    metering): steady-state window after the contention-aware credits warm
+    up over 6 consecutive windows (CIDER's first window IS optimistic)."""
+    rows = []
+    for mode in MODES:
+        pa = PointerArray.create(4096, mode=mode).populate(
+            np.arange(4096), np.arange(4096))
+        for w in range(6):
+            ops = generate_ops(WORKLOADS["write-intensive"], 4096, 4096, 64,
+                               seed=w)
+            batch = OpBatch.make(ops.kinds, ops.keys % 4096, ops.values,
+                                 n_cns=16)
+            pa, res, io = pa.apply(batch)
+        d = io.as_dict()
+        rows.append(f"pointer_array,{mode.name},{d['mn_iops']},{d['writes']},"
+                    f"{d['cas']},{d['retries']},{d['combined']},{d['mn_bytes']}")
+    for mode in MODES:
+        sa = SmartART.create(key_bits=12, mode=mode).populate(
+            np.arange(4096), np.arange(4096))
+        for w in range(6):
+            ops = generate_ops(WORKLOADS["write-intensive"], 4096, 4096, 64,
+                               seed=w)
+            sa, res, io = sa.apply(ops.kinds, ops.keys % 4096, ops.values,
+                                   n_cns=16)
+        d = io.as_dict()
+        rows.append(f"smart_art,{mode.name},{d['mn_iops']},{d['writes']},"
+                    f"{d['cas']},{d['retries']},{d['combined']},{d['mn_bytes']}")
+    _emit("table_engine_io",
+          "store,mode,mn_iops,writes,cas,retries,combined,mn_bytes", rows)
+
+
+FIGS = {
+    "fig11": fig11_12_throughput_latency,
+    "fig13": fig13_skew,
+    "fig14": fig14_accuracy,
+    "fig15": fig15_params,
+    "fig16": fig16_19_race_smart,
+    "fig20": fig20_factor,
+    "fig21": fig21_wc_efficiency,
+    "fig23": fig23_array_size,
+    "fig24": fig24_value_size,
+    "engine_io": table_engine_io,
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(FIGS)
+    t0 = time.time()
+    for name in names:
+        t1 = time.time()
+        FIGS[name](fast=args.fast)
+        print(f"[{name} done in {time.time() - t1:.0f}s]", flush=True)
+    print(f"\nall benchmarks done in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Reproduce the paper's headline micro-benchmark figure (Fig 11a):
+pointer-array throughput vs client count for all four schemes.
+
+    PYTHONPATH=src python examples/cider_sim_figures.py
+"""
+from repro.core.sim import SimParams, make_streams, run_sim
+from repro.core.types import SyncMode
+from repro.workloads.ycsb import WORKLOADS
+
+p = SimParams(n_lanes=512, ticks=8192, max_ops=1024)
+streams = make_streams(p, WORKLOADS["write-intensive"], n_keys=1_000_000)
+print("clients," + ",".join(m.name for m in SyncMode))
+for nc in [16, 48, 128, 256, 512]:
+    row = [str(nc)]
+    for mode in SyncMode:
+        r = run_sim(p, mode, streams, nc)
+        row.append(f"{r.throughput_mops:.2f}")
+    print(",".join(row), flush=True)

@@ -1,0 +1,97 @@
+"""Sharded checkpointing with elastic restore.
+
+Format: one ``.npz`` per (host) shard + a JSON manifest keyed by LOGICAL
+leaf path — restore re-slices by logical shape, so a checkpoint written on
+one mesh restores onto any other (elastic scaling).  ``save_async`` moves
+serialization off the training critical path (the step only blocks on the
+previous save's completion — checkpoint/restart per DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "AsyncCheckpointer"]
+
+
+def _flatten(tree) -> dict[str, Any]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out
+
+
+def save(path: str, step: int, tree) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    np.savez(os.path.join(path, f"step_{step:08d}.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "leaves": {k: {"shape": list(a.shape), "dtype": str(a.dtype)}
+                   for k, a in arrays.items()},
+    }
+    tmp = os.path.join(path, "manifest.json.tmp")
+    with open(tmp, "w") as f:
+        json.dump(manifest, f, indent=1)
+    os.replace(tmp, os.path.join(path, "manifest.json"))
+
+
+def latest_step(path: str) -> int | None:
+    mf = os.path.join(path, "manifest.json")
+    if not os.path.exists(mf):
+        return None
+    with open(mf) as f:
+        return json.load(f)["step"]
+
+
+def restore(path: str, tree_like, shardings=None, step: int | None = None):
+    """Restore into the structure of ``tree_like`` (values replaced).  With
+    ``shardings`` (a matching tree of NamedShardings for the CURRENT mesh),
+    arrays are placed shard-by-shard — the mesh may differ from the one that
+    wrote the checkpoint (elastic restore)."""
+    step = latest_step(path) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {path}")
+    data = np.load(os.path.join(path, f"step_{step:08d}.npz"))
+    flat_names = list(_flatten(tree_like).keys())
+    leaves, treedef = jax.tree_util.tree_flatten(tree_like)
+    sh_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                 if shardings is not None else [None] * len(leaves))
+    out = []
+    for name, like, sh in zip(flat_names, leaves, sh_leaves):
+        arr = data[name]
+        if list(arr.shape) != list(like.shape):
+            raise ValueError(f"{name}: ckpt {arr.shape} != model {like.shape}")
+        a = jax.device_put(arr.astype(like.dtype), sh) if sh is not None \
+            else jax.numpy.asarray(arr.astype(like.dtype))
+        out.append(a)
+    return jax.tree_util.tree_unflatten(treedef, out), step
+
+
+class AsyncCheckpointer:
+    """Fire-and-forget saves; ``wait()`` joins the in-flight save."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._thread: threading.Thread | None = None
+
+    def save_async(self, step: int, tree) -> None:
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)  # snapshot before mutation
+        self._thread = threading.Thread(
+            target=save, args=(self.path, step, host_tree), daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

@@ -1,0 +1,12 @@
+"""qwen2.5-32b — dense GQA with QKV bias [hf:Qwen/Qwen2.5-32B]."""
+import dataclasses
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-32b", family="dense", n_layers=64, d_model=5120,
+    n_heads=40, n_kv=8, d_ff=27648, vocab=152064, head_dim=128,
+    qkv_bias=True, rope_theta=1e6)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=128, n_heads=4, n_kv=2, d_ff=256, vocab=512,
+    head_dim=32, attn_chunk=64, smoke=True)

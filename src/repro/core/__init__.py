@@ -1,0 +1,11 @@
+"""The paper's primary contribution: the CIDER synchronization engine.
+
+* ``engine``   — batched SPMD dataplane (4 sync modes, exact verb metering)
+* ``combine``  — global write-combining primitives (sort / segment / rank)
+* ``credits``  — contention-aware AIMD credit tables (Algorithm 1)
+* ``protocol``/``simnet``/``sim`` — the testbed-calibrated protocol simulator
+* ``oracle``   — sequential reference semantics
+"""
+from repro.core.types import EngineConfig, IOMetrics, OpBatch, OpKind, SyncMode
+
+__all__ = ["EngineConfig", "IOMetrics", "OpBatch", "OpKind", "SyncMode"]

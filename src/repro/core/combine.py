@@ -1,0 +1,131 @@
+"""Global write-combining as a batched primitive (§4.2, TPU adaptation).
+
+The paper's mechanism: the MCS wait queue *is* a registry of concurrent
+conflicting UPDATEs, so the whole queue is served by ONE combined write by
+the queue-tail client ("executor"), with last-writer-wins resolution.
+
+The batch analogue on an SPMD dataplane: the ops that would have formed a
+wait queue are exactly the ops in the current batch that share a key.  A
+stable sort by (key, queue-position) materializes every wait queue at once;
+the *last* element of each run is the executor; everyone else is combined.
+
+This module is the pure-jnp reference implementation; ``repro.kernels.
+wc_combine`` provides the fused Pallas TPU kernel with an identical contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CombinePlan", "plan_combine", "segment_last", "segment_counts",
+           "OpStats", "per_key_stats", "local_executors"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CombinePlan:
+    """The materialized wait queues of one synchronization window.
+
+    All arrays are in *sorted* order (by key, then queue position); ``perm``
+    maps sorted -> original batch positions.
+    """
+    perm: jax.Array          # (B,) int32: original index of sorted element
+    keys_sorted: jax.Array   # (B,) int32
+    is_first: jax.Array      # (B,) bool: head of a key run (the "coordinator")
+    is_last: jax.Array       # (B,) bool: tail of a key run (the "executor")
+    run_length: jax.Array    # (B,) int32: my queue length (WC batch size)
+    rank: jax.Array          # (B,) int32: my position within my queue (0-based)
+    n_unique: jax.Array      # () int32: number of distinct keys (executed writes)
+
+
+def plan_combine(keys: jax.Array, pos: jax.Array, valid: jax.Array) -> CombinePlan:
+    """Build wait queues for a batch of write ops.
+
+    ``keys``: (B,) slot ids; ``pos``: (B,) serialization priority (queue
+    order); ``valid``: (B,) bool — invalid ops sort to the back and form a
+    dedicated run that callers must mask out (they are never executors of a
+    real key because the sort key is +inf for them).
+    """
+    b = keys.shape[0]
+    big = jnp.int32(2**31 - 1)
+    k = jnp.where(valid, keys, big)
+    # Stable composite sort: primary key, secondary queue position.
+    order = jnp.lexsort((pos, k))
+    ks = k[order]
+    is_first = jnp.concatenate([jnp.ones((1,), bool), ks[1:] != ks[:-1]])
+    is_last = jnp.concatenate([ks[1:] != ks[:-1], jnp.ones((1,), bool)])
+    seg = jnp.cumsum(is_first.astype(jnp.int32)) - 1          # segment id per element
+    ones = jnp.ones((b,), jnp.int32)
+    counts = jax.ops.segment_sum(ones, seg, num_segments=b)   # per-segment length
+    run_length = counts[seg]
+    starts = jnp.cumsum(jnp.where(is_first, run_length, 0)) - jnp.where(is_first, run_length, 0)
+    # rank within run = position - start of my segment
+    seg_start = jax.ops.segment_min(jnp.arange(b, dtype=jnp.int32), seg, num_segments=b)
+    rank = jnp.arange(b, dtype=jnp.int32) - seg_start[seg]
+    del starts
+    valid_sorted = valid[order]
+    n_unique = jnp.sum(is_first & valid_sorted).astype(jnp.int32)
+    return CombinePlan(
+        perm=order.astype(jnp.int32), keys_sorted=ks, is_first=is_first,
+        is_last=is_last, run_length=run_length, rank=rank, n_unique=n_unique,
+    )
+
+
+def segment_last(plan: CombinePlan, values: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Last-writer-wins combine: one (key, value) per wait queue.
+
+    Returns (unique_keys, winning_values, winner_mask_sorted); the first two
+    are length-B with garbage beyond ``plan.n_unique`` positions — callers
+    scatter with the mask, so no compaction is required on device.
+    """
+    vs = values[plan.perm]
+    return (jnp.where(plan.is_last, plan.keys_sorted, 0),
+            jnp.where(plan.is_last, vs, 0),
+            plan.is_last)
+
+
+def segment_counts(plan: CombinePlan, valid: jax.Array) -> jax.Array:
+    """Per-original-op queue length (the paper's "WC batch size"), unsorted order."""
+    out = jnp.zeros_like(plan.run_length)
+    return out.at[plan.perm].set(jnp.where(valid[plan.perm], plan.run_length, 0))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class OpStats:
+    """Per-original-op wait-queue statistics over the masked op subset."""
+    is_tail: jax.Array    # (B,) bool — queue tail (the executor / last writer)
+    mult_of: jax.Array    # (B,) int32 — queue length of my key (0 if unmasked)
+    rank_of: jax.Array    # (B,) int32 — 0-based rank in my queue (0 if unmasked)
+    retry_sum: jax.Array  # () int32 — sum of ranks = Σ_k m_k(m_k-1)/2
+
+
+def per_key_stats(keys: jax.Array, pos: jax.Array, mask: jax.Array) -> OpStats:
+    """Queue statistics per masked op, grouped by key, ordered by ``pos``."""
+    plan = plan_combine(keys, pos, mask)
+    b = keys.shape[0]
+    mask_s = mask[plan.perm]
+    is_tail_s = plan.is_last & mask_s
+    zeros_i = jnp.zeros((b,), jnp.int32)
+    is_tail = jnp.zeros((b,), bool).at[plan.perm].set(is_tail_s)
+    mult_of = zeros_i.at[plan.perm].set(jnp.where(mask_s, plan.run_length, 0))
+    rank_of = zeros_i.at[plan.perm].set(jnp.where(mask_s, plan.rank, 0))
+    retry_sum = jnp.sum(jnp.where(mask_s, plan.rank, 0))
+    return OpStats(is_tail=is_tail, mult_of=mult_of, rank_of=rank_of,
+                   retry_sum=retry_sum)
+
+
+def local_executors(keys: jax.Array, cn: jax.Array, pos: jax.Array,
+                    mask: jax.Array) -> jax.Array:
+    """Local write combining (§3.1): the last (by ``pos``) masked op of each
+    (key, compute-node) group — the only one that leaves the CN."""
+    big = jnp.int32(2**31 - 1)
+    k = jnp.where(mask, keys, big)
+    order = jnp.lexsort((pos, cn, k))
+    ks, cs = k[order], cn[order]
+    last = jnp.concatenate([(ks[1:] != ks[:-1]) | (cs[1:] != cs[:-1]),
+                            jnp.ones((1,), bool)])
+    out = jnp.zeros(keys.shape, bool).at[order].set(last)
+    return out & mask

@@ -1,0 +1,94 @@
+"""Contention-aware synchronization: the per-key AIMD credit scheme (§4.3).
+
+Each compute node tracks, per data pointer, a ``credit`` (contention level)
+and a ``retryRecord`` (CAS retries of the last optimistic attempt).  The
+decision rule (Algorithm 1):
+
+  * credit > 0  -> consume one credit, take the PESSIMISTIC path (MCS + WC);
+  * credit == 0 -> take the OPTIMISTIC path (out-of-place write + CAS).
+
+Feedback:
+  * pessimistic, WC batch  > 1 : credit += 2            (additive increase)
+  * pessimistic, WC batch == 1 : credit //= AIMD_FACTOR (multiplicative decrease)
+  * optimistic, nRetry >= HOTNESS_THRESHOLD and the *previous* attempt also
+    retried >= HOTNESS_THRESHOLD: credit += INITIAL_CREDIT (=36; Fig 15).
+
+The table is a fixed-size direct-mapped hash (the paper stores per-key 8B of
+metadata for hot keys only; a direct-mapped table gives the same O(1) cost
+with graceful aliasing for cold keys — collisions can only mis-route a key to
+a path that remains *correct*, only its cost changes; see §4.5.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CreditState", "credit_init", "credit_decide", "credit_feedback"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CreditState:
+    credit: jax.Array        # (table,) int32
+    retry_record: jax.Array  # (table,) int32
+
+
+def credit_init(table_size: int) -> CreditState:
+    return CreditState(credit=jnp.zeros((table_size,), jnp.int32),
+                       retry_record=jnp.zeros((table_size,), jnp.int32))
+
+
+def _slot(keys: jax.Array, table_size: int) -> jax.Array:
+    # Fibonacci hash — good avalanche for sequential slot ids.
+    h = (keys.astype(jnp.uint32) * jnp.uint32(2654435761)) >> jnp.uint32(7)
+    return (h % jnp.uint32(table_size)).astype(jnp.int32)
+
+
+def credit_decide(state: CreditState, keys: jax.Array, is_write: jax.Array,
+                  table_size: int) -> tuple[CreditState, jax.Array]:
+    """Algorithm 1 lines 2-6 for a whole batch: returns (state', pessimistic).
+
+    Batched semantics: every write to a hot key in this window consumes one
+    credit (each would have consumed one on its own CN; the engine's table is
+    per data-shard, so we decrement by the number of writers, floored at 0).
+    """
+    slots = _slot(keys, table_size)
+    has_credit = state.credit[slots] > 0
+    pess = has_credit & is_write
+    dec = jax.ops.segment_sum(pess.astype(jnp.int32), slots, num_segments=table_size)
+    credit = jnp.maximum(state.credit - dec, 0)
+    return dataclasses.replace(state, credit=credit), pess
+
+
+def credit_feedback(state: CreditState, keys: jax.Array, table_size: int,
+                    pess: jax.Array, wc_batch: jax.Array,
+                    opt: jax.Array, n_retry: jax.Array,
+                    initial_credit: int = 36, hotness_threshold: int = 2,
+                    aimd_factor: int = 2) -> CreditState:
+    """Algorithm 1 lines 13-16 (pessimistic) and 20-22 (optimistic), batched.
+
+    ``wc_batch``: per-op combined batch size (pessimistic ops only);
+    ``n_retry``: per-op CAS retry count (optimistic ops only).
+    """
+    slots = _slot(keys, table_size)
+    tsz = table_size
+    # --- pessimistic feedback (applied once per wait queue => use the executor) ---
+    grow = pess & (wc_batch > 1)
+    shrink = pess & (wc_batch <= 1)
+    inc = jax.ops.segment_max(jnp.where(grow, 2, 0), slots, num_segments=tsz)
+    do_shrink = jax.ops.segment_max(shrink.astype(jnp.int32), slots, num_segments=tsz)
+    do_grow = jax.ops.segment_max(grow.astype(jnp.int32), slots, num_segments=tsz)
+    credit = state.credit + jnp.where(do_grow > 0, inc, 0)
+    credit = jnp.where((do_shrink > 0) & (do_grow == 0), credit // aimd_factor, credit)
+    # --- optimistic feedback: two consecutive attempts with >= threshold retries ---
+    hot_now = opt & (n_retry >= hotness_threshold)
+    prev_hot = state.retry_record[slots] >= hotness_threshold
+    promote = jax.ops.segment_max((hot_now & prev_hot).astype(jnp.int32), slots,
+                                  num_segments=tsz)
+    credit = credit + promote * initial_credit
+    # retryRecord <- nRetry of the latest optimistic attempt on this slot
+    latest = jax.ops.segment_max(jnp.where(opt, n_retry, -1), slots, num_segments=tsz)
+    retry_record = jnp.where(latest >= 0, latest, state.retry_record)
+    return CreditState(credit=credit, retry_record=retry_record)

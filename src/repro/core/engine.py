@@ -1,0 +1,387 @@
+"""The CIDER batched dataplane engine (§4, TPU adaptation).
+
+Executes one *synchronization window* — a device batch of concurrent KV ops —
+against a pointer store under one of four synchronization schemes
+(``SyncMode``): OSYNC (optimistic CAS-retry), SPIN (CAS spinlock + backoff),
+MCS (ShiftLock), CIDER (global write-combining + contention-aware credits).
+
+Design invariants:
+
+* **Semantic equivalence**: all four modes produce the *same* logical store
+  state and per-op results — the canonical serialization is queue order ==
+  batch position (``OpBatch.pos``), which is exactly what the MCS wait queue
+  enforces and what last-writer-wins combining preserves (§4.5.1).  Tests
+  assert equivalence against a sequential oracle.
+* **Exact I/O metering**: modes differ in the RDMA-verb I/O they would issue
+  on real DM; we meter those *exactly* (closed-form per wait queue, derived
+  from the protocol workflows in Figs 9-10), because memory-side NIC IOPS is
+  the paper's bottleneck resource.  The protocol *simulator*
+  (``repro.core.sim``) additionally models queueing delay and reproduces the
+  paper's throughput/latency figures; this engine is the jit/shard_map
+  production path.
+
+Per-queue I/O cost (m = effective concurrent UPDATE writers in the window),
+derived from §2.2, §2.3, §4.2, Fig 9-10:
+
+  OSYNC : m heap WRITEs + m(m+1)/2 CAS   (worst-case synchrony; §2.2)
+  SPIN  : m WRITEs + m ptr-CAS + m lock-CAS + m unlock-CAS + backoff polls
+  MCS   : m enqueue-CAS + m WRITEs + m ptr-CAS + m epoch-FAA + 2(m-1) CN msgs
+  CIDER : m enqueue-CAS + 1 tail-READ + 1 WRITE + 1 ptr-CAS + m epoch-FAA
+          + (m+1) CN msgs                 (m>1; m==1 falls back to MCS cost)
+
+Local WC (applied to every scheme, §5.1) first collapses same-(key, CN)
+writers to one effective writer; CIDER's global WC collapses same-key writers
+across CNs to one executor (§4.2.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import combine as wc
+from repro.core.credits import CreditState, credit_decide, credit_feedback
+from repro.core.types import (NULL_PTR, EngineConfig, IOMetrics, OpBatch,
+                              OpKind, SyncMode)
+
+__all__ = ["StoreState", "Results", "store_init", "store_view", "apply_batch",
+           "populate"]
+
+_KEEP = jnp.int32(-2)
+_NONE = jnp.int32(-1)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class StoreState:
+    """The memory-pool resident state (all arrays shardable over slots)."""
+    ptr: jax.Array       # (n_slots,) int32 heap index, NULL_PTR if empty
+    ver: jax.Array       # (n_slots,) int32 4-bit version (DELETE handling, §4.2.2)
+    epoch: jax.Array     # (n_slots,) int32 lock epoch (fault tolerance, §4.6)
+    heap: jax.Array      # (heap_slots,) int32 out-of-place value payloads
+    heap_top: jax.Array  # () int32 bump cursor
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Results:
+    ok: jax.Array           # (B,) bool — success (IDU) / found (SEARCH)
+    value: jax.Array        # (B,) int32 — SEARCH payload, _NONE if absent
+    pessimistic: jax.Array  # (B,) bool — CIDER path decision (Fig 14)
+    combined: jax.Array     # (B,) bool — write combined away by WC
+    wc_batch: jax.Array     # (B,) int32 — wait-queue length at execution
+    retries: jax.Array      # (B,) int32 — CAS retries (optimistic path ops)
+
+
+def store_init(cfg: EngineConfig) -> StoreState:
+    return StoreState(
+        ptr=jnp.full((cfg.n_slots,), NULL_PTR, jnp.int32),
+        ver=jnp.zeros((cfg.n_slots,), jnp.int32),
+        epoch=jnp.zeros((cfg.n_slots,), jnp.int32),
+        heap=jnp.full((cfg.heap_slots,), _NONE, jnp.int32),
+        heap_top=jnp.zeros((), jnp.int32),
+    )
+
+
+def populate(cfg: EngineConfig, state: StoreState, keys, values) -> StoreState:
+    """Bulk-load KV pairs (the paper pre-populates 60M items, §5.1)."""
+    keys = jnp.asarray(keys, jnp.int32)
+    values = jnp.asarray(values, jnp.int32)
+    n = keys.shape[0]
+    loc = state.heap_top + jnp.arange(n, dtype=jnp.int32)
+    heap = state.heap.at[loc].set(values)
+    ptr = state.ptr.at[keys].set(loc)
+    return dataclasses.replace(state, ptr=ptr, heap=heap, heap_top=state.heap_top + n)
+
+
+def store_view(state: StoreState) -> tuple[jax.Array, jax.Array]:
+    """Logical (exists, value) view — what tests compare across sync modes."""
+    exists = state.ptr != NULL_PTR
+    val = jnp.where(exists, state.heap[jnp.clip(state.ptr, 0)], _NONE)
+    return exists, val
+
+
+# ---------------------------------------------------------------------------
+# Segmented linearization: per-slot sequential semantics, fully vectorized.
+# Each op is a transfer function on (exists, value); functions on a 2-point
+# domain compose associatively, so one segmented associative_scan linearizes
+# every wait queue in the batch at once.
+# ---------------------------------------------------------------------------
+
+def _op_transfer(kinds, values):
+    """Per-op transfer function: for e_in in {0,1} -> (e_out, c_out).
+    c_out == _KEEP means "pass the incoming value through"."""
+    k = kinds
+    ins, upd, dele = (k == OpKind.INSERT), (k == OpKind.UPDATE), (k == OpKind.DELETE)
+    e0 = jnp.where(ins, 1, 0).astype(jnp.int32)            # from empty
+    e1 = jnp.where(dele, 0, 1).astype(jnp.int32)           # from occupied
+    c0 = jnp.where(ins, values, _KEEP)
+    c1 = jnp.where(upd, values, _KEEP)
+    c1 = jnp.where(dele, _NONE, c1)
+    return jnp.stack([e0, e1], -1), jnp.stack([c0, c1], -1)
+
+
+def _compose(f, g):
+    """(f then g) on the 2-point domain; both are (e[B,2], c[B,2])."""
+    fe, fc = f
+    ge, gc = g
+    mid = fe                                   # (B,2) in {0,1}
+    out_e = jnp.take_along_axis(ge, mid, axis=-1)
+    g_at = jnp.take_along_axis(gc, mid, axis=-1)
+    out_c = jnp.where(g_at == _KEEP, fc, g_at)
+    return out_e, out_c
+
+
+def _segmented_scan(e, c, first):
+    """Inclusive segmented scan of transfer functions along axis 0."""
+    def comb(a, b):
+        ae, ac, af = a
+        be, bc, bf = b
+        ce, cc = _compose((ae, ac), (be, bc))
+        e_out = jnp.where(bf[:, None], be, ce)
+        c_out = jnp.where(bf[:, None], bc, cc)
+        return e_out, c_out, af | bf
+    return jax.lax.associative_scan(comb, (e, c, first), axis=0)
+
+
+def _apply(e, c, e_in, v_in):
+    """Apply transfer (e[B,2], c[B,2]) to incoming scalar state (e_in, v_in)."""
+    idx = e_in.astype(jnp.int32)[:, None]
+    e_out = jnp.take_along_axis(e, idx, axis=-1)[:, 0]
+    c_out = jnp.take_along_axis(c, idx, axis=-1)[:, 0]
+    v_out = jnp.where(c_out == _KEEP, v_in, c_out)
+    return e_out.astype(bool), v_out
+
+
+# ---------------------------------------------------------------------------
+# Mode-specific I/O metering helpers
+# ---------------------------------------------------------------------------
+
+def _backoff_polls(wait_rounds, cap):
+    """Deterministic truncated-exponential-backoff poll count while waiting
+    ``wait_rounds`` service rounds: probes at 1,2,4,...,2^cap,2^cap,... ."""
+    w = wait_rounds.astype(jnp.float32)
+    exp_phase = jnp.ceil(jnp.log2(jnp.maximum(w, 1.0) + 1.0))
+    exp_phase = jnp.minimum(exp_phase, float(cap))
+    linear = jnp.maximum(w - (2.0 ** cap - 1.0), 0.0) / (2.0 ** cap)
+    return jnp.where(wait_rounds > 0, exp_phase + jnp.floor(linear), 0.0).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
+                batch: OpBatch, valid: jax.Array | None = None,
+                ) -> tuple[StoreState, CreditState, Results, IOMetrics]:
+    """Execute one synchronization window. See module docstring."""
+    b = batch.kinds.shape[0]
+    if valid is None:
+        valid = batch.kinds != OpKind.NOP
+    else:
+        valid = valid & (batch.kinds != OpKind.NOP)
+    kinds, keys, values, pos, cn = (batch.kinds, batch.keys, batch.values,
+                                    batch.pos, batch.cn)
+    is_search = (kinds == OpKind.SEARCH) & valid
+    is_insert = (kinds == OpKind.INSERT) & valid
+    is_update = (kinds == OpKind.UPDATE) & valid
+    is_delete = (kinds == OpKind.DELETE) & valid
+    is_write = is_insert | is_update | is_delete
+
+    # ---- 1. linearize: one segmented scan serializes every slot's queue ----
+    plan_all = wc.plan_combine(keys, pos, valid)
+    perm = plan_all.perm
+    e_t, c_t = _op_transfer(kinds[perm], values[perm])
+    # invalid ops are identity transforms
+    v_sorted = valid[perm]
+    ident_e = jnp.broadcast_to(jnp.array([0, 1], jnp.int32), (b, 2))
+    ident_c = jnp.full((b, 2), _KEEP, jnp.int32)
+    e_t = jnp.where(v_sorted[:, None], e_t, ident_e)
+    c_t = jnp.where(v_sorted[:, None], c_t, ident_c)
+    incl_e, incl_c, _ = _segmented_scan(e_t, c_t, plan_all.is_first)
+    # incoming (pre-window) state per sorted element's slot
+    slot = jnp.clip(keys[perm], 0, cfg.n_slots - 1)
+    p = state.ptr[slot]
+    e_init = p != NULL_PTR
+    v_init = jnp.where(e_init, state.heap[jnp.clip(p, 0)], _NONE)
+    # state BEFORE each op: exclusive scan = shifted inclusive, reset at heads
+    prev_e = jnp.roll(incl_e, 1, axis=0)
+    prev_c = jnp.roll(incl_c, 1, axis=0)
+    e_before, v_before = _apply(prev_e, prev_c, e_init, v_init)
+    e_before = jnp.where(plan_all.is_first, e_init, e_before)
+    v_before = jnp.where(plan_all.is_first, v_init, v_before)
+    # per-op success / search results (sorted order)
+    ks = kinds[perm]
+    ok_s = jnp.where(ks == OpKind.SEARCH, e_before,
+            jnp.where(ks == OpKind.INSERT, ~e_before,
+             jnp.where((ks == OpKind.UPDATE) | (ks == OpKind.DELETE), e_before, False)))
+    ok_s = ok_s & v_sorted
+    val_s = jnp.where((ks == OpKind.SEARCH) & e_before, v_before, _NONE)
+    # state AFTER the last op of each queue -> new slot contents
+    e_fin, v_fin = _apply(incl_e, incl_c, e_init, v_init)
+    seg_changed = ok_s & (ks != OpKind.SEARCH)          # any successful IDU
+    # segment ids for reductions
+    seg = jnp.cumsum(plan_all.is_first.astype(jnp.int32)) - 1
+    seg_any_write = jax.ops.segment_max(seg_changed.astype(jnp.int32), seg,
+                                        num_segments=b).astype(bool)
+    # ---- 2. commit final slot states (one out-of-place write per queue) ----
+    # Out-of-bounds indices with mode="drop" mask out non-committing lanes.
+    tail = plan_all.is_last & seg_any_write[seg] & v_sorted
+    oob_h, oob_s = jnp.int32(cfg.heap_slots), jnp.int32(cfg.n_slots)
+    n_commits = jnp.sum(tail.astype(jnp.int32))
+    commit_rank = jnp.cumsum(tail.astype(jnp.int32)) - 1
+    loc = (state.heap_top + commit_rank).astype(jnp.int32)
+    heap = state.heap.at[jnp.where(tail, loc, oob_h)].set(v_fin, mode="drop")
+    new_ptr_val = jnp.where(e_fin, loc, NULL_PTR)
+    ptr = state.ptr.at[jnp.where(tail, slot, oob_s)].set(new_ptr_val, mode="drop")
+    # version: +1 per successful DELETE (mod 16 — the 4-bit field of Fig 8)
+    del_succ = (ks == OpKind.DELETE) & ok_s
+    dver = jax.ops.segment_sum(del_succ.astype(jnp.int32), seg, num_segments=b)
+    ver = (state.ver.at[jnp.where(plan_all.is_last, slot, oob_s)]
+           .add(dver[seg], mode="drop")) % 16
+
+    # ---- 3. synchronization-mode decision (CIDER credit split, §4.3) ----
+    upd = is_update
+    if cfg.mode == SyncMode.CIDER:
+        credits2, pess = credit_decide(credits, keys, upd, credits.credit.shape[0])
+    elif cfg.mode in (SyncMode.MCS, SyncMode.SPIN):
+        credits2, pess = credits, upd
+    else:  # OSYNC
+        credits2, pess = credits, jnp.zeros_like(upd)
+    opt_upd = upd & ~pess
+
+    # ---- 4. effective writers after local WC (per (key, CN) group) --------
+    # Local WC combines same-CN UPDATEs (applied to every baseline, §5.1);
+    # combined ops never leave the CN.  CIDER's pessimistic path does NOT
+    # pre-filter: every client enqueues in the *global* MCS queue (Fig 7),
+    # and global WC subsumes local WC.
+    loc_exec_opt = wc.local_executors(keys, cn, pos, opt_upd) if cfg.local_wc else opt_upd
+    if cfg.mode == SyncMode.CIDER or not cfg.local_wc:
+        loc_exec_pess = pess
+    else:
+        loc_exec_pess = wc.local_executors(keys, cn, pos, pess)
+
+    # ---- 5. per-mode I/O metering ------------------------------------------
+    i64 = jnp.int32
+    def s(x):
+        return jnp.sum(x.astype(i64))
+
+    n_found_search = jnp.sum(((ks == OpKind.SEARCH) & ok_s).astype(jnp.int32))
+    reads = s(valid) * cfg.index_read_iops + n_found_search
+    mn_bytes = (s(valid) * cfg.index_read_bytes + n_found_search * cfg.value_bytes)
+    writes = jnp.zeros((), i64)
+    cas = jnp.zeros((), i64)
+    faa = jnp.zeros((), i64)
+    cn_msgs = jnp.zeros((), i64)
+    retries_total = jnp.zeros((), i64)
+    combined_total = jnp.zeros((), i64)
+    per_op_retries = jnp.zeros((b,), jnp.int32)
+    per_op_combined = jnp.zeros((b,), bool)
+    per_op_batch = jnp.ones((b,), jnp.int32)
+
+    # INSERTs: optimistic CAS on the empty pointer in every mode (§4.2.2);
+    # concurrent same-key INSERTs: exactly one wins, losers fail once.
+    writes += s(is_insert)
+    cas += s(is_insert)
+    mn_bytes += s(is_insert) * (cfg.value_bytes + cfg.ptr_bytes)
+
+    # DELETEs: pessimistic modes lock (enqueue-CAS + ptr-CAS + epoch-FAA);
+    # OSYNC CAS-retries (worst-case serial like updates, no heap write).
+    n_del = s(is_delete)
+    if cfg.mode == SyncMode.OSYNC:
+        plan_d = wc.per_key_stats(keys, pos, is_delete)
+        cas += s(is_delete) + plan_d.retry_sum
+        retries_total += plan_d.retry_sum
+        mn_bytes += (n_del + plan_d.retry_sum) * cfg.ptr_bytes
+    else:
+        cas += 2 * n_del
+        faa += n_del
+        mn_bytes += n_del * (2 * cfg.ptr_bytes + 8)
+
+    # UPDATE paths ------------------------------------------------------------
+    # optimistic subset (whole batch for OSYNC; cold keys for CIDER)
+    plan_o = wc.per_key_stats(keys, pos, loc_exec_opt)
+    m_opt_writes = s(loc_exec_opt)
+    writes += m_opt_writes
+    cas += m_opt_writes + plan_o.retry_sum
+    retries_total += plan_o.retry_sum
+    mn_bytes += (m_opt_writes * (cfg.value_bytes + cfg.ptr_bytes)
+                 + plan_o.retry_sum * cfg.ptr_bytes)
+    combined_total += s(opt_upd) - m_opt_writes      # local-WC combined
+    per_op_retries = jnp.where(loc_exec_opt, plan_o.rank_of, per_op_retries)
+    per_op_combined = per_op_combined | (opt_upd & ~loc_exec_opt)
+
+    # pessimistic subset
+    m_pe = s(loc_exec_pess)                          # effective queued writers
+    if cfg.mode == SyncMode.SPIN:
+        plan_p = wc.per_key_stats(keys, pos, loc_exec_pess)
+        polls = _backoff_polls(plan_p.rank_of * 3, cfg.backoff_cap)
+        polls_sum = s(jnp.where(loc_exec_pess, polls, 0))
+        writes += m_pe
+        cas += 3 * m_pe + polls_sum                  # lock + ptr + unlock + polls
+        retries_total += polls_sum
+        mn_bytes += m_pe * (cfg.value_bytes + 3 * cfg.ptr_bytes) + polls_sum * cfg.ptr_bytes
+        per_op_retries = jnp.where(loc_exec_pess, polls, per_op_retries)
+    elif cfg.mode == SyncMode.MCS:
+        writes += m_pe
+        cas += 2 * m_pe                              # enqueue masked-CAS + ptr CAS
+        faa += m_pe                                  # epoch release
+        plan_p = wc.per_key_stats(keys, pos, loc_exec_pess)
+        cn_msgs += 2 * s(jnp.where(loc_exec_pess, (plan_p.mult_of > 1), 0))
+        mn_bytes += m_pe * (cfg.value_bytes + 2 * cfg.ptr_bytes + 8)
+        per_op_batch = jnp.where(loc_exec_pess, 1, per_op_batch)
+    elif cfg.mode == SyncMode.CIDER:
+        # global WC: all queued writers on a key collapse to ONE executed write
+        plan_p = wc.per_key_stats(keys, pos, loc_exec_pess)
+        is_exec = loc_exec_pess & plan_p.is_tail     # queue tail = executor
+        n_q = s(is_exec)                             # number of wait queues
+        multi = loc_exec_pess & (plan_p.mult_of > 1)
+        n_multi_q = s(is_exec & (plan_p.mult_of > 1))
+        cas += m_pe + n_q                            # m enqueues + 1 ptr CAS per queue
+        writes += n_q                                # ONE combined write per queue
+        faa += m_pe                                  # every client's release FAA
+        reads += n_multi_q                           # coordinator tail lookup (step 1)
+        cn_msgs += s(jnp.where(is_exec & (plan_p.mult_of > 1),
+                               plan_p.mult_of + 1, 0))
+        mn_bytes += (m_pe * cfg.ptr_bytes + n_q * (cfg.value_bytes + cfg.ptr_bytes)
+                     + m_pe * 8 + n_multi_q * cfg.lock_bytes)
+        combined_total += s(pess) - n_q
+        per_op_combined = per_op_combined | (pess & ~is_exec)
+        per_op_batch = jnp.where(loc_exec_pess, plan_p.mult_of, per_op_batch)
+
+    executed = writes
+
+    # ---- 6. credit feedback (§4.3, Algorithm 1 lines 13-22) ---------------
+    if cfg.mode == SyncMode.CIDER:
+        credits3 = credit_feedback(
+            credits2, keys, credits.credit.shape[0],
+            pess=loc_exec_pess, wc_batch=per_op_batch,
+            opt=loc_exec_opt | is_insert, n_retry=per_op_retries,
+            initial_credit=cfg.initial_credit,
+            hotness_threshold=cfg.hotness_threshold,
+            aimd_factor=cfg.aimd_factor)
+    else:
+        credits3 = credits2
+
+    # ---- 7. epoch FAA bookkeeping (fault-tolerance heartbeat, §4.6) -------
+    if cfg.mode in (SyncMode.MCS, SyncMode.CIDER):
+        rel = loc_exec_pess | is_delete
+        epoch = state.epoch.at[jnp.where(rel, keys, 0)].add(rel.astype(jnp.int32))
+    else:
+        epoch = state.epoch
+
+    new_state = StoreState(ptr=ptr, ver=ver, epoch=epoch, heap=heap,
+                           heap_top=state.heap_top + n_commits)
+    # unsort results
+    ok = jnp.zeros((b,), bool).at[perm].set(ok_s)
+    value = jnp.full((b,), _NONE, jnp.int32).at[perm].set(val_s)
+    res = Results(ok=ok, value=value, pessimistic=pess,
+                  combined=per_op_combined, wc_batch=per_op_batch,
+                  retries=per_op_retries)
+    io = IOMetrics(reads=reads, writes=writes, cas=cas, faa=faa,
+                   cn_msgs=cn_msgs, mn_bytes=mn_bytes, retries=retries_total,
+                   combined=combined_total, executed=executed)
+    return new_state, credits3, res, io

@@ -1,0 +1,63 @@
+"""Sequential (single-client) oracle for the KV store semantics.
+
+Applies ops strictly in batch-position order against a dict — the ground
+truth that every synchronization mode must be equivalent to (linearizability
+of the window with queue order == batch position).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.types import OpKind
+
+__all__ = ["OracleStore"]
+
+
+class OracleStore:
+    def __init__(self):
+        self.kv: dict[int, int] = {}
+
+    def populate(self, keys, values):
+        for k, v in zip(np.asarray(keys).tolist(), np.asarray(values).tolist()):
+            self.kv[int(k)] = int(v)
+
+    def apply(self, kinds, keys, values, valid=None):
+        """Returns (ok[B], value[B]) per op, mutating the store."""
+        kinds = np.asarray(kinds)
+        keys = np.asarray(keys)
+        values = np.asarray(values)
+        b = kinds.shape[0]
+        if valid is None:
+            valid = np.ones(b, bool)
+        ok = np.zeros(b, bool)
+        out = np.full(b, -1, np.int64)
+        for i in range(b):
+            if not valid[i] or kinds[i] == OpKind.NOP:
+                continue
+            k, v = int(keys[i]), int(values[i])
+            if kinds[i] == OpKind.SEARCH:
+                if k in self.kv:
+                    ok[i] = True
+                    out[i] = self.kv[k]
+            elif kinds[i] == OpKind.INSERT:
+                if k not in self.kv:
+                    ok[i] = True
+                    self.kv[k] = v
+            elif kinds[i] == OpKind.UPDATE:
+                if k in self.kv:
+                    ok[i] = True
+                    self.kv[k] = v
+            elif kinds[i] == OpKind.DELETE:
+                if k in self.kv:
+                    ok[i] = True
+                    del self.kv[k]
+        return ok, out
+
+    def view(self, n_slots):
+        exists = np.zeros(n_slots, bool)
+        val = np.full(n_slots, -1, np.int64)
+        for k, v in self.kv.items():
+            if 0 <= k < n_slots:
+                exists[k] = True
+                val[k] = v
+        return exists, val

@@ -1,0 +1,532 @@
+"""Per-client protocol state machines for the four synchronization schemes,
+vectorized over client lanes (§2.2, §2.3, §4.2-4.4, Figs 9-10).
+
+Each lane executes a closed-loop YCSB client.  One ``tick`` advances every
+lane by at most one protocol event; lock/queue state lives in hashed tables
+(ticket-FIFO == MCS queue order; documented approximation: hash collisions
+between two concurrently-hot keys falsely serialize them — negligible at
+<=1024 lanes vs 2^14 slots).
+
+Phase map (see DESIGN.md):
+  THINK -> IDX -> { KV                         (SEARCH)
+                  | OW -> OCAS*                (optimistic write; CAS retry loop)
+                  | SLOCK* -> SW -> SCAS -> SUNL        (CAS spinlock + backoff)
+                  | ENQ -> [MNOTIFY -> MWAIT] -> MW -> MCAS -> MFAA   (MCS)
+                  | ENQ -> ... -> CREAD -> CMSG -> MW -> MCAS -> MFAA (CIDER
+                      coordinator: combined write for the whole wait queue)
+                  | MWAIT -> PWAIT -> PFAA     (CIDER participant: combined) }
+
+The CIDER delegation detail (§4.2.1): on acquiring a non-empty queue, the
+head becomes *coordinator*, reads the lock entry to identify the tail
+(executor) and transfers ownership.  Timing-wise the verb chain
+READ -> CN_MSG -> WRITE -> CAS -> FAA is identical whichever client runs it,
+so the simulator lets the coordinator lane run the combined write and
+completes participants via the relay chain (one cn_rtt per hop), exactly the
+verb count and serialization of Fig 7.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.simnet import NetState, SimParams, issue_mn, net_init
+from repro.core.types import OpKind, SyncMode
+
+__all__ = ["SimState", "sim_init", "tick", "PHASES"]
+
+(THINK, IDX, KV, OW, OCAS, ORD, SLOCK, SBACK, SW, SCAS, SUNL, ENQ, MNOTIFY,
+ MWAIT, MW, MCAS, MFAA, CREAD, CMSG, PWAIT, PFAA, LWAIT, DEAD) = range(23)
+PHASES = dict(THINK=THINK, IDX=IDX, KV=KV, OW=OW, OCAS=OCAS, ORD=ORD,
+              SLOCK=SLOCK, SBACK=SBACK, SW=SW, SCAS=SCAS, SUNL=SUNL, ENQ=ENQ,
+              MNOTIFY=MNOTIFY, MWAIT=MWAIT, MW=MW, MCAS=MCAS, MFAA=MFAA,
+              CREAD=CREAD, CMSG=CMSG, PWAIT=PWAIT, PFAA=PFAA, LWAIT=LWAIT,
+              DEAD=DEAD)
+
+V_READ, V_WRITE, V_CAS, V_FAA, V_CN = range(5)
+_BIG = jnp.int32(2**30)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SimState:
+    # ---- per-lane ----
+    phase: jax.Array       # (N,)
+    ready: jax.Array       # (N,) next event tick
+    kind: jax.Array        # (N,) current OpKind
+    hkey: jax.Array        # (N,) hashed key -> lock/ticket tables
+    hc: jax.Array          # (N,) credit-table slot
+    hl: jax.Array          # (N,) local-WC slot
+    ticket: jax.Array      # (N,) MCS ticket
+    att: jax.Array         # (N,) CAS/lock attempt count for current op
+    kver_seen: jax.Array   # (N,) pointer version read before CAS
+    comb_tail: jax.Array   # (N,) coordinator: executor's ticket
+    comb_pend: jax.Array   # (N,) coordinator: combined write in flight
+    own_local: jax.Array   # (N,) I hold the local-WC flag
+    idx_left: jax.Array    # (N,) remaining index reads for current op
+    op_start: jax.Array    # (N,) issue tick of current op
+    op_idx: jax.Array      # (N,) position in my op stream
+    is_pess: jax.Array     # (N,) current write takes the pessimistic path
+    wait_start: jax.Array  # (N,) MWAIT entry tick (deadlock detection §4.6)
+    # ---- hashed key tables ----
+    next_ticket: jax.Array  # (H,)
+    now_serving: jax.Array  # (H,)
+    kver: jax.Array         # (H,) pointer version (optimistic CAS conflicts)
+    lockw: jax.Array        # (H,) spinlock word
+    comb_time: jax.Array    # (H,) last combined batch: release tick
+    comb_base: jax.Array    # (H,)   "  : coordinator ticket
+    comb_upto: jax.Array    # (H,)   "  : executor ticket
+    epoch: jax.Array        # (H,) lock epoch (FAA'd on release, §4.6)
+    # ---- per-CN tables (flattened G x 2^bits) ----
+    lflag: jax.Array        # local WC busy flags
+    credit: jax.Array       # contention credits (§4.3)
+    rrec: jax.Array         # retryRecord (§4.3)
+    # ---- network + counters ----
+    net: NetState
+    verbs: jax.Array        # (5,) per-class verb counts
+    done: jax.Array         # () completed ops
+    done_w: jax.Array       # () completed writes
+    retries: jax.Array      # () redundant CAS/poll attempts
+    comb_g: jax.Array       # () globally combined writes
+    comb_l: jax.Array       # () locally combined writes
+    pess_w: jax.Array       # () writes that took the pessimistic path
+    exec_w: jax.Array       # () executed (non-combined) writes
+    batch_sum: jax.Array    # () sum of WC batch sizes
+    batch_cnt: jax.Array    # () number of combined batches
+    hot_ideal: jax.Array    # () ops finishing with att >= HOTNESS_THRESHOLD
+    deadlocks: jax.Array    # () deadlock repairs performed
+    hist: jax.Array         # (HB,) latency histogram (1-tick buckets)
+
+
+def sim_init(p: SimParams, streams) -> SimState:
+    n = p.n_lanes
+    h = 1 << p.h_bits
+    g = (n + p.lanes_per_cn - 1) // p.lanes_per_cn
+    zN = jnp.zeros((n,), jnp.int32)
+    zH = jnp.zeros((h,), jnp.int32)
+    kinds0 = streams["kinds"][:, 0]
+    return SimState(
+        phase=jnp.full((n,), THINK, jnp.int32),
+        ready=(jnp.arange(n, dtype=jnp.int32) % 7),   # staggered start
+        kind=kinds0.astype(jnp.int32),
+        hkey=streams["hkey"][:, 0].astype(jnp.int32),
+        hc=streams["hc"][:, 0].astype(jnp.int32),
+        hl=streams["hl"][:, 0].astype(jnp.int32),
+        ticket=zN, att=zN, kver_seen=zN, comb_tail=zN, comb_pend=zN,
+        own_local=zN, idx_left=zN, op_start=zN, op_idx=zN, is_pess=zN,
+        wait_start=zN,
+        next_ticket=zH, now_serving=zH, kver=zH, lockw=zH,
+        comb_time=zH, comb_base=jnp.full((h,), -1, jnp.int32),
+        comb_upto=jnp.full((h,), -1, jnp.int32), epoch=zH,
+        lflag=jnp.zeros((g << p.hl_bits,), jnp.int32),
+        credit=jnp.zeros((g << p.hc_bits,), jnp.int32),
+        rrec=jnp.zeros((g << p.hc_bits,), jnp.int32),
+        net=net_init(2 * h),
+        verbs=jnp.zeros((5,), jnp.int32),
+        done=jnp.zeros((), jnp.int32), done_w=jnp.zeros((), jnp.int32),
+        retries=jnp.zeros((), jnp.int32), comb_g=jnp.zeros((), jnp.int32),
+        comb_l=jnp.zeros((), jnp.int32), pess_w=jnp.zeros((), jnp.int32),
+        exec_w=jnp.zeros((), jnp.int32), batch_sum=jnp.zeros((), jnp.int32),
+        batch_cnt=jnp.zeros((), jnp.int32), hot_ideal=jnp.zeros((), jnp.int32),
+        deadlocks=jnp.zeros((), jnp.int32),
+        hist=jnp.zeros((p.hist_buckets,), jnp.int32),
+    )
+
+
+def _scatter_min_id(h_idx, mask, h_size, n, prio=None):
+    """One winner per hashed key among masked lanes.  ``prio`` (a permutation
+    of lane ids) models RNIC timing jitter: without it, fixed min-id
+    arbitration starves high-id lanes *completely*, which is stronger than
+    the real unfairness the paper describes (§4.6 Fairness)."""
+    ids = jnp.arange(n, dtype=jnp.int32)
+    if prio is None:
+        prio = ids
+    tmp = jnp.full((h_size,), _BIG, jnp.int32)
+    tmp = tmp.at[jnp.where(mask, h_idx, h_size)].min(prio, mode="drop")
+    return mask & (tmp[h_idx] == prio)
+
+
+def _group_rank(h_idx, mask, h_size, n):
+    """0-based rank by lane id within each hashed-key group of masked lanes."""
+    ids = jnp.arange(n, dtype=jnp.int32)
+    order = jnp.lexsort((ids, jnp.where(mask, h_idx, h_size)))
+    hs = jnp.where(mask, h_idx, h_size)[order]
+    is_first = jnp.concatenate([jnp.ones((1,), bool), hs[1:] != hs[:-1]])
+    pos = jnp.arange(n, dtype=jnp.int32)
+    seg_start = jax.lax.cummax(jnp.where(is_first, pos, 0))
+    rank_sorted = pos - seg_start
+    return jnp.zeros((n,), jnp.int32).at[order].set(rank_sorted)
+
+
+def tick(p: SimParams, mode: SyncMode, streams, state: SimState, t
+         ) -> SimState:
+    """Advance every lane by one event.  ``t``: current tick (i32 scalar)."""
+    n, H = p.n_lanes, 1 << p.h_bits
+    s = state
+    active = s.phase != DEAD
+    ev = (s.ready == t) & active
+    ids = jnp.arange(n, dtype=jnp.int32)
+    li = (ids // p.lanes_per_cn) * (1 << p.hl_bits) + s.hl   # local-WC slot
+    ci = (ids // p.lanes_per_cn) * (1 << p.hc_bits) + s.hc   # credit slot
+
+    is_search = s.kind == OpKind.SEARCH
+    is_insert = s.kind == OpKind.INSERT
+    is_delete = s.kind == OpKind.DELETE
+
+    # accumulators for this tick
+    issue_mask = jnp.zeros((n,), bool)
+    issue_bytes = jnp.zeros((n,), jnp.int32)
+    issue_cost = jnp.zeros((n,), jnp.int32)
+    issue_atomic = jnp.zeros((n,), bool)
+    new_phase = s.phase
+    new_ready = s.ready
+    verbs = s.verbs
+    complete = jnp.zeros((n,), bool)
+    combined_g_fin = jnp.zeros((n,), bool)
+    combined_l_fin = jnp.zeros((n,), bool)
+
+    issue_addr = s.hkey
+
+    def issue(m, phase_id, verb, nbytes, lock_addr=False):
+        """``lock_addr``: the verb targets the key's LOCK ENTRY, a different
+        memory word than the data pointer — atomics on the two serialize
+        independently at the RNIC."""
+        nonlocal issue_mask, issue_bytes, issue_cost, issue_atomic, issue_addr
+        nonlocal new_phase, verbs
+        atomic = verb in (V_CAS, V_FAA)
+        issue_mask = issue_mask | m
+        issue_bytes = jnp.where(m, nbytes, issue_bytes)
+        issue_cost = jnp.where(m, p.atomic_cost if atomic else 1, issue_cost)
+        if atomic:
+            issue_atomic = issue_atomic | m
+        if lock_addr:
+            issue_addr = jnp.where(m, s.hkey + H, issue_addr)
+        new_phase = jnp.where(m, phase_id, new_phase)
+        verbs = verbs.at[verb].add(jnp.sum(m.astype(jnp.int32)))
+
+    def cn_hop(m, phase_id):
+        nonlocal new_phase, new_ready, verbs
+        new_phase = jnp.where(m, phase_id, new_phase)
+        new_ready = jnp.where(m, t + p.cn_rtt, new_ready)
+        verbs = verbs.at[V_CN].add(jnp.sum(m.astype(jnp.int32)))
+
+    # ============ THINK -> first index read =================================
+    m = ev & (s.phase == THINK)
+    idx_left = jnp.where(m, p.index_reads - 1, s.idx_left)
+    issue(m, IDX, V_READ, p.index_bytes)
+
+    # ============ IDX completion =============================================
+    m = ev & (s.phase == IDX)
+    more = m & (idx_left > 0)
+    idx_left = jnp.where(more, idx_left - 1, idx_left)
+    issue(more, IDX, V_READ, p.index_bytes)
+    disp = m & ~more
+    # SEARCH -> KV read
+    issue(disp & is_search, KV, V_READ, p.value_bytes)
+    w_disp = disp & ~is_search
+    # ---- synchronization-mode decision (§4.3) ----
+    if mode == SyncMode.CIDER:
+        have_credit = (s.credit[ci] > 0) | p.cas_off
+        pess = w_disp & ((~is_insert & have_credit) | is_delete)
+        credit = s.credit.at[jnp.where(pess & ~is_delete, ci, s.credit.shape[0])
+                             ].add(-1, mode="drop")
+        credit = jnp.maximum(credit, 0)
+    elif mode in (SyncMode.SPIN, SyncMode.MCS):
+        pess = w_disp & ~is_insert      # INSERTs bypass locks in ALL schemes
+        credit = s.credit
+    else:
+        pess = jnp.zeros((n,), bool)
+        credit = s.credit
+    opt = w_disp & ~pess
+    is_pess = jnp.where(w_disp, pess, s.is_pess.astype(bool))
+    # ---- local write combining (baselines only; global WC subsumes it) ----
+    lflag = s.lflag
+    own_local = s.own_local
+    if p.local_wc and mode != SyncMode.CIDER:
+        wc_cand = w_disp & ~is_insert & ~is_delete
+        busy = lflag[li] > 0
+        join = wc_cand & busy
+        claim_c = wc_cand & ~busy
+        claim_w = _scatter_min_id(li, claim_c, lflag.shape[0], n)
+        join = join | (claim_c & ~claim_w)
+        lflag = lflag.at[jnp.where(claim_w, li, lflag.shape[0])].set(1, mode="drop")
+        own_local = jnp.where(claim_w, 1, own_local)
+        new_phase = jnp.where(join, LWAIT, new_phase)
+        new_ready = jnp.where(join, t + 1, new_ready)
+        go = ~join
+    else:
+        go = jnp.ones((n,), bool)
+    # ---- dispatch the write ----
+    o = opt & go
+    kver_seen = s.kver_seen
+    kver_seen = jnp.where(o & is_delete, s.kver[s.hkey], kver_seen)
+    issue(o & is_delete, OCAS, V_CAS, 8)          # DELETE: no heap write
+    issue(o & ~is_delete, OW, V_WRITE, p.value_bytes)
+    if mode == SyncMode.SPIN:
+        issue(pess & go, SLOCK, V_CAS, 8, lock_addr=True)
+    elif mode in (SyncMode.MCS, SyncMode.CIDER):
+        issue(pess & go, ENQ, V_CAS, 16, lock_addr=True)  # masked-CAS on lock entry
+
+    # ============ KV read completion -> op done ==============================
+    m = ev & (s.phase == KV)
+    complete = complete | m
+
+    # ============ optimistic path ============================================
+    m = ev & (s.phase == OW)
+    kver_seen = jnp.where(m, s.kver[s.hkey], kver_seen)
+    issue(m, OCAS, V_CAS, 8)
+
+    m = ev & (s.phase == OCAS)
+    elig = m & (kver_seen == s.kver[s.hkey])
+    prio = (ids + t * 40503) % n          # rotating arbitration (NIC jitter)
+    win = _scatter_min_id(s.hkey, elig, H, n, prio)
+    kver = s.kver.at[jnp.where(win, s.hkey, H)].add(1, mode="drop")
+    lose = m & ~win
+    att = jnp.where(lose, s.att + 1, s.att)
+    # a failed CAS returns the current value, so the client re-CASes
+    # immediately with the returned (version, pointer) — the staleness
+    # window of each retry is exactly one CAS RTT (§2.2)
+    kver_seen = jnp.where(lose, kver[s.hkey], kver_seen)
+    retries = s.retries + jnp.sum(lose.astype(jnp.int32))
+    complete = complete | win
+    if mode == SyncMode.CIDER:
+        # Retry-budget escape (implementation choice, see DESIGN.md): an
+        # optimistic UPDATE that keeps losing re-runs Algorithm 1's decision
+        # mid-op — `escape_retries` straight failures are self-evident
+        # contention, so the client self-promotes the key and enqueues.
+        # Without a bound, a cold-start burst can park enough clients in the
+        # CAS loop to saturate the pointer's address and strangle the
+        # pessimistic path too (two-equilibria death spiral).
+        escape = lose & (att >= p.escape_retries) & ~is_insert
+        credit = credit.at[jnp.where(escape, ci, credit.shape[0])].add(
+            p.initial_credit, mode="drop")
+        is_pess = is_pess | escape
+        issue(escape, ENQ, V_CAS, 16, lock_addr=True)
+        lose = lose & ~escape
+    issue(lose, OCAS, V_CAS, 8)
+
+    # ============ spinlock path ==============================================
+    m = ev & (s.phase == SLOCK)
+    free = m & (s.lockw[s.hkey] == 0)
+    swin = _scatter_min_id(s.hkey, free, H, n)
+    lockw = s.lockw.at[jnp.where(swin, s.hkey, H)].set(1, mode="drop")
+    slose = m & ~swin
+    att = jnp.where(slose, att + 1, att)
+    retries = retries + jnp.sum(slose.astype(jnp.int32))
+    boff = jnp.minimum(att, p.backoff_cap)
+    new_phase = jnp.where(slose, SBACK, new_phase)
+    new_ready = jnp.where(slose, t + (1 << boff), new_ready)
+    issue(swin & is_delete, SCAS, V_CAS, 8)
+    issue(swin & ~is_delete, SW, V_WRITE, p.value_bytes)
+
+    m = ev & (s.phase == SBACK)
+    issue(m, SLOCK, V_CAS, 8, lock_addr=True)
+
+    m = ev & (s.phase == SW)
+    issue(m, SCAS, V_CAS, 8)
+
+    m = ev & (s.phase == SCAS)
+    kver = kver.at[jnp.where(m, s.hkey, H)].add(1, mode="drop")
+    issue(m, SUNL, V_CAS, 8, lock_addr=True)
+
+    m = ev & (s.phase == SUNL)
+    lockw = lockw.at[jnp.where(m, s.hkey, H)].set(0, mode="drop")
+    complete = complete | m
+
+    # ============ MCS / CIDER pessimistic path ===============================
+    # ENQ completion: assign FIFO tickets (get-and-set on the lock entry tail)
+    m = ev & (s.phase == ENQ)
+    rank = _group_rank(s.hkey, m, H, n)
+    base = s.next_ticket[s.hkey]
+    ticket = jnp.where(m, base + rank, s.ticket)
+    next_ticket = s.next_ticket.at[jnp.where(m, s.hkey, H)].add(1, mode="drop")
+
+    def acquire(acq, ticket, next_ticket, comb_tail_in):
+        """Dispatch lanes that just acquired the lock (head of queue)."""
+        tail = next_ticket[s.hkey] - 1
+        if mode == SyncMode.CIDER and not p.wc_off:
+            coord = acq & (tail > ticket) & ~is_delete
+        else:
+            coord = jnp.zeros((n,), bool)
+        plain = acq & ~coord
+        return coord, plain, jnp.where(coord, tail, comb_tail_in)
+
+    acq = m & (ticket == s.now_serving[s.hkey])
+    coord, plain, comb_tail = acquire(acq, ticket, next_ticket, s.comb_tail)
+    issue(coord, CREAD, V_READ, 16)               # read lock entry -> find tail
+    issue(plain & is_delete, MCAS, V_CAS, 8)
+    issue(plain & ~is_delete, MW, V_WRITE, p.value_bytes)
+    waitq = m & ~acq
+    cn_hop(waitq, MNOTIFY)                        # notify predecessor
+    wait_start = jnp.where(waitq, t, s.wait_start)
+
+    m = ev & (s.phase == MNOTIFY)
+    new_phase = jnp.where(m, MWAIT, new_phase)
+    new_ready = jnp.where(m, t + 1, new_ready)
+
+    # MWAIT polling (local; no MN traffic — ShiftLock's design point)
+    m = ev & (s.phase == MWAIT)
+    if mode == SyncMode.CIDER:
+        # stale-batch safety: tickets are monotone, so an old comb_upto can
+        # never cover a ticket issued after that batch was released.
+        combed = m & (s.comb_upto[s.hkey] >= ticket) & (s.comb_base[s.hkey] < ticket)
+        relay = s.comb_time[s.hkey] + (ticket - s.comb_base[s.hkey]) * p.cn_rtt
+        new_phase = jnp.where(combed, PWAIT, new_phase)
+        new_ready = jnp.where(combed, jnp.maximum(relay, t + 1), new_ready)
+    else:
+        combed = jnp.zeros((n,), bool)
+    acq2 = m & ~combed & (s.now_serving[s.hkey] == ticket)
+    coord2, plain2, comb_tail = acquire(acq2, ticket, next_ticket, comb_tail)
+    issue(coord2, CREAD, V_READ, 16)
+    issue(plain2 & is_delete, MCAS, V_CAS, 8)
+    issue(plain2 & ~is_delete, MW, V_WRITE, p.value_bytes)
+    # deadlock detection & repair (§4.6): epoch stagnant for max_wait
+    still = m & ~combed & ~acq2
+    if p.fail_lane >= 0:
+        stuck = still & (t - s.wait_start > p.max_wait)
+        repair = _scatter_min_id(s.hkey, stuck, H, n)
+        now_serving = s.now_serving.at[jnp.where(repair, s.hkey, H)].add(1, mode="drop")
+        deadlocks = s.deadlocks + jnp.sum(repair.astype(jnp.int32))
+        wait_start = jnp.where(stuck, t, wait_start)
+    else:
+        now_serving = s.now_serving
+        deadlocks = s.deadlocks
+    new_ready = jnp.where(still, t + 1, new_ready)
+
+    # coordinator: READ done -> CN msg to executor -> combined write
+    m = ev & (s.phase == CREAD)
+    cn_hop(m, CMSG)
+    m = ev & (s.phase == CMSG)
+    comb_pend = jnp.where(m, 1, s.comb_pend)
+    issue(m, MW, V_WRITE, p.value_bytes)
+
+    m = ev & (s.phase == MW)
+    issue(m, MCAS, V_CAS, 8)
+
+    m = ev & (s.phase == MCAS)
+    kver = kver.at[jnp.where(m, s.hkey, H)].add(1, mode="drop")
+    issue(m, MFAA, V_FAA, 8, lock_addr=True)
+
+    # release (epoch FAA done)
+    m = ev & (s.phase == MFAA)
+    epoch = s.epoch.at[jnp.where(m, s.hkey, H)].add(1, mode="drop")
+    comb_rel = m & (comb_pend > 0)
+    batch = jnp.where(comb_rel, comb_tail - ticket + 1, 1)
+    now_serving = now_serving.at[jnp.where(comb_rel, s.hkey, H)].set(
+        comb_tail + 1, mode="drop")
+    plain_rel = m & ~comb_rel
+    now_serving = now_serving.at[jnp.where(plain_rel, s.hkey, H)].set(
+        ticket + 1, mode="drop")
+    comb_time = s.comb_time.at[jnp.where(comb_rel, s.hkey, H)].set(t, mode="drop")
+    comb_base = s.comb_base.at[jnp.where(comb_rel, s.hkey, H)].set(ticket, mode="drop")
+    comb_upto = s.comb_upto.at[jnp.where(comb_rel, s.hkey, H)].set(comb_tail, mode="drop")
+    # handoff message if someone is queued behind (counted, client-side)
+    handoff = plain_rel & (next_ticket[s.hkey] > ticket + 1)
+    verbs = verbs.at[V_CN].add(jnp.sum(handoff.astype(jnp.int32)))
+    comb_pend = jnp.where(m, 0, comb_pend)
+    complete = complete | m
+
+    # participants: relay arrives -> FAA -> done
+    m = ev & (s.phase == PWAIT)
+    issue(m, PFAA, V_FAA, 8, lock_addr=True)
+    m = ev & (s.phase == PFAA)
+    complete = complete | m
+    combined_g_fin = combined_g_fin | m
+    epoch = epoch.at[jnp.where(m, s.hkey, H)].add(1, mode="drop")
+
+    # local-WC joiners: owner cleared the flag -> done (result = combiner's)
+    m = ev & (s.phase == LWAIT)
+    freed = m & (lflag[li] == 0)
+    complete = complete | freed
+    combined_l_fin = combined_l_fin | freed
+    stay = m & ~freed
+    new_ready = jnp.where(stay, t + 1, new_ready)
+
+    # ============ op completion ==============================================
+    fin = complete
+    # release local-WC ownership
+    lflag = lflag.at[jnp.where(fin & (own_local > 0), li, lflag.shape[0])
+                     ].set(0, mode="drop")
+    own_local = jnp.where(fin, 0, own_local)
+    # latency histogram
+    lat = jnp.clip(t - s.op_start, 0, p.hist_buckets - 1)
+    hist = s.hist.at[jnp.where(fin, lat, p.hist_buckets)].add(1, mode="drop")
+    # contention-aware feedback (§4.3, Algorithm 1)
+    fin_w = fin & ~is_search
+    if mode == SyncMode.CIDER:
+        fin_opt = fin_w & ~is_pess
+        promote = fin_opt & (att >= p.hotness_threshold) \
+                          & (s.rrec[ci] >= p.hotness_threshold)
+        credit = credit.at[jnp.where(promote, ci, credit.shape[0])].add(
+            p.initial_credit, mode="drop")
+        rrec = s.rrec.at[jnp.where(fin_opt, ci, s.rrec.shape[0])].set(
+            att, mode="drop")
+        # Algorithm 1 lines 13-16 run on EVERY pessimisticUpdate call:
+        # coordinators AND participants of a multi-element batch see
+        # WCBatchSize > 1 and add +2 on their own CN's credit table.
+        grow = (fin & comb_rel & (batch > 1)) | (fin & combined_g_fin)
+        # executor found no peers to combine -> multiplicative decrease
+        shrink = fin & plain_rel & is_pess & ~is_delete
+        credit = credit.at[jnp.where(grow, ci, credit.shape[0])].add(2, mode="drop")
+        newc = credit[ci] // p.aimd_factor
+        credit = credit.at[jnp.where(shrink, ci, credit.shape[0])].set(
+            newc, mode="drop")
+    else:
+        rrec = s.rrec
+
+    # counters
+    done = s.done + jnp.sum(fin.astype(jnp.int32))
+    done_w = s.done_w + jnp.sum(fin_w.astype(jnp.int32))
+    comb_g = s.comb_g + jnp.sum((combined_g_fin & fin).astype(jnp.int32))
+    comb_l = s.comb_l + jnp.sum((combined_l_fin & fin).astype(jnp.int32))
+    pess_w = s.pess_w + jnp.sum((fin_w & is_pess).astype(jnp.int32))
+    exec_w = s.exec_w + jnp.sum((fin_w & ~combined_g_fin & ~combined_l_fin)
+                                .astype(jnp.int32))
+    batch_sum = s.batch_sum + jnp.sum(jnp.where(fin & comb_rel, batch, 0))
+    batch_cnt = s.batch_cnt + jnp.sum((fin & comb_rel).astype(jnp.int32))
+    hot_ideal = s.hot_ideal + jnp.sum((fin_w & (att >= p.hotness_threshold))
+                                      .astype(jnp.int32))
+
+    # load next op
+    op_idx = jnp.where(fin, s.op_idx + 1, s.op_idx)
+    col = op_idx % p.max_ops
+    gk = streams["kinds"][ids, col].astype(jnp.int32)
+    ghk = streams["hkey"][ids, col].astype(jnp.int32)
+    ghc = streams["hc"][ids, col].astype(jnp.int32)
+    ghl = streams["hl"][ids, col].astype(jnp.int32)
+    kind = jnp.where(fin, gk, s.kind)
+    hkey = jnp.where(fin, ghk, s.hkey)
+    hc = jnp.where(fin, ghc, s.hc)
+    hl = jnp.where(fin, ghl, s.hl)
+    att = jnp.where(fin, 0, att)
+    is_pess_i = jnp.where(fin, 0, is_pess.astype(jnp.int32))
+    new_phase = jnp.where(fin, THINK, new_phase)
+    new_ready = jnp.where(fin, t + p.think, new_ready)
+    op_start = jnp.where(fin, t + p.think, s.op_start)
+
+    # ============ inject failure (§4.6) ======================================
+    if p.fail_lane >= 0:
+        kill = (ids == p.fail_lane) & (t >= p.fail_tick)
+        new_phase = jnp.where(kill, DEAD, new_phase)
+
+    # ============ network: issue all MN verbs of this tick ===================
+    net2, done_at = issue_mn(s.net, t, issue_mask, issue_bytes, issue_cost,
+                             issue_atomic, issue_addr, p)
+    new_ready = jnp.where(issue_mask, done_at, new_ready)
+
+    return SimState(
+        phase=new_phase, ready=new_ready, kind=kind, hkey=hkey, hc=hc, hl=hl,
+        ticket=ticket, att=att, kver_seen=kver_seen, comb_tail=comb_tail,
+        comb_pend=comb_pend, own_local=own_local, idx_left=idx_left,
+        op_start=op_start, op_idx=op_idx, is_pess=is_pess_i,
+        wait_start=wait_start,
+        next_ticket=next_ticket, now_serving=now_serving, kver=kver,
+        lockw=lockw, comb_time=comb_time, comb_base=comb_base,
+        comb_upto=comb_upto, epoch=epoch,
+        lflag=lflag, credit=credit, rrec=rrec,
+        net=net2, verbs=verbs, done=done, done_w=done_w, retries=retries,
+        comb_g=comb_g, comb_l=comb_l, pess_w=pess_w, exec_w=exec_w,
+        batch_sum=batch_sum, batch_cnt=batch_cnt, hot_ideal=hot_ideal,
+        deadlocks=deadlocks, hist=hist,
+    )

@@ -1,0 +1,123 @@
+"""Protocol-simulator driver: reproduces the paper's figures on CPU.
+
+``run_sim`` advances the vectorized client state machines of
+``repro.core.protocol`` over ``SimParams.ticks`` microseconds and returns the
+throughput / latency / I/O statistics that the paper's evaluation plots
+(Figs 1-5, 11-15, 20-21).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.protocol import DEAD, SimState, sim_init, tick
+from repro.core.simnet import SimParams
+from repro.core.types import OpKind, SyncMode
+from repro.workloads.ycsb import WORKLOADS, WorkloadSpec, generate_ops
+
+__all__ = ["SimParams", "SimResult", "make_streams", "run_sim", "sweep_clients"]
+
+
+@dataclasses.dataclass
+class SimResult:
+    mode: str
+    n_clients: int
+    ticks: int
+    ops_done: int
+    throughput_mops: float      # completed ops / simulated microsecond
+    p50_us: float
+    p99_us: float
+    retries: int                # redundant CAS / lock polls (Fig 1)
+    mn_iops_used: int           # total MN verbs
+    cn_msgs: int
+    wc_rate: float              # combined / writes (Fig 4, 21)
+    wc_rate_local: float
+    wc_rate_global: float
+    avg_batch: float            # mean WC batch size (Fig 21)
+    pess_ratio: float           # pessimistic writes / writes (Fig 14)
+    ideal_pess_ratio: float     # writes with >= threshold retries / writes
+    deadlocks: int
+
+    def row(self) -> str:
+        return (f"{self.mode},{self.n_clients},{self.throughput_mops:.4f},"
+                f"{self.p50_us:.1f},{self.p99_us:.1f},{self.retries},"
+                f"{self.wc_rate:.3f},{self.avg_batch:.2f},{self.pess_ratio:.3f}")
+
+
+def make_streams(p: SimParams, spec: WorkloadSpec, n_keys: int,
+                 theta: float | None = None, seed: int = 0) -> dict:
+    """Pre-generate per-lane op streams with pre-hashed table slots."""
+    n, m = p.n_lanes, p.max_ops
+    ops = generate_ops(spec, n * m, n_keys, n, seed=seed, theta=theta)
+    kinds = ops.kinds.reshape(m, n).T.astype(np.int32)
+    keys = ops.keys.reshape(m, n).T
+    h = ((keys * 2654435761) >> 7) & ((1 << p.h_bits) - 1)
+    hc = ((keys * 0x85EBCA6B) >> 5) & ((1 << p.hc_bits) - 1)
+    hl = ((keys * 0xC2B2AE35) >> 4) & ((1 << p.hl_bits) - 1)
+    return {
+        "kinds": jnp.asarray(kinds, jnp.int32),
+        "hkey": jnp.asarray(h, jnp.int32),
+        "hc": jnp.asarray(hc, jnp.int32),
+        "hl": jnp.asarray(hl, jnp.int32),
+    }
+
+
+@functools.partial(jax.jit, static_argnames=("p", "mode"))
+def _run(p: SimParams, mode: SyncMode, streams, n_active: jnp.ndarray) -> SimState:
+    state = sim_init(p, streams)
+    ids = jnp.arange(p.n_lanes, dtype=jnp.int32)
+    state = dataclasses.replace(
+        state, phase=jnp.where(ids < n_active, state.phase, DEAD))
+
+    def body(s, t):
+        return tick(p, mode, streams, s, t), None
+
+    state, _ = jax.lax.scan(body, state, jnp.arange(p.ticks, dtype=jnp.int32))
+    return state
+
+
+def _pct(hist: np.ndarray, q: float) -> float:
+    c = np.cumsum(hist)
+    if c[-1] == 0:
+        return float("nan")
+    return float(np.searchsorted(c, q * c[-1]))
+
+
+def run_sim(p: SimParams, mode: SyncMode, streams, n_clients: int) -> SimResult:
+    s = _run(p, mode, streams, jnp.int32(n_clients))
+    hist = np.asarray(s.hist)
+    done = int(s.done)
+    done_w = max(int(s.done_w), 1)
+    verbs = np.asarray(s.verbs)
+    comb = int(s.comb_g) + int(s.comb_l)
+    return SimResult(
+        mode=mode.name, n_clients=n_clients, ticks=p.ticks, ops_done=done,
+        throughput_mops=done / p.ticks,
+        p50_us=_pct(hist, 0.50), p99_us=_pct(hist, 0.99),
+        retries=int(s.retries),
+        mn_iops_used=int(verbs[:4].sum()), cn_msgs=int(verbs[4]),
+        wc_rate=comb / done_w,
+        wc_rate_local=int(s.comb_l) / done_w,
+        wc_rate_global=int(s.comb_g) / done_w,
+        avg_batch=float(int(s.batch_sum) / max(int(s.batch_cnt), 1)),
+        pess_ratio=int(s.pess_w) / done_w,
+        ideal_pess_ratio=int(s.hot_ideal) / done_w,
+        deadlocks=int(s.deadlocks),
+    )
+
+
+def sweep_clients(p: SimParams, modes, workload: str, n_keys: int,
+                  client_counts, theta: float | None = None,
+                  seed: int = 0) -> list[SimResult]:
+    spec = WORKLOADS[workload]
+    streams = make_streams(p, spec, n_keys, theta=theta, seed=seed)
+    out = []
+    for mode in modes:
+        for nc in client_counts:
+            out.append(run_sim(p, mode, streams, nc))
+    return out

@@ -1,0 +1,127 @@
+"""Network / cost model for the protocol-level simulator (§5 testbed model).
+
+Models the disaggregated-memory fabric the paper measures on (CloudLab,
+100 Gbps ConnectX-6):
+
+* **Memory-pool NIC**: the bottleneck resource.  A token-bucket server with
+  ``mn_cap`` verbs/tick of IOPS capacity and ``mn_bw`` bytes/tick of
+  bandwidth; excess arrivals queue (FIFO by client id within a tick), so a
+  verb issued under backlog *B* completes after ``rtt + B/cap`` ticks.  This
+  is what optimistic retries saturate (§2.2, Fig 1).
+* **Client NICs**: CN<->CN messages (MCS handoffs, WC coordination) cost
+  ``cn_rtt`` ticks and are modeled *uncontended* — precisely ShiftLock's
+  design point of shifting polling off the memory pool.
+
+One tick == 1 microsecond; one-sided RDMA RTT ~2 us.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SimParams", "NetState", "net_init", "issue_mn"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SimParams:
+    # population
+    n_lanes: int = 1024          # physical client lanes (mask unused ones)
+    lanes_per_cn: int = 4        # paper: 4 clients per (virtual) CN
+    max_ops: int = 4096          # pregenerated ops per lane (wraps around)
+    # time
+    ticks: int = 32768           # simulated microseconds
+    rtt: int = 2                 # MN verb round-trip (ticks)
+    cn_rtt: int = 2              # client<->client message (ticks)
+    think: int = 1               # client compute between ops (ticks)
+    # memory-pool NIC — calibrated against the paper's headline ratios
+    # (EXPERIMENTS.md §Calibration): O-SYNC collapse 2.7x, CIDER p99 ~13x
+    mn_cap: int = 32             # capacity tokens/tick (reads: 1 token each)
+    atomic_cost: int = 1         # CAS/FAA token cost (distinct-address atomics
+                                 # pipeline fine on CX-6)
+    addr_atomic_cap: int = 2     # same-ADDRESS atomics/tick — RNIC serializes
+                                 # concurrent atomics to one address on a PCIe
+                                 # read-modify-write (Kalia et al., ATC'16);
+                                 # this is what hot-pointer CAS storms hit
+    mn_bw: int = 12500           # bytes/tick (100 Gbps)
+    value_bytes: int = 8
+    index_bytes: int = 8
+    index_reads: int = 1         # per-op index I/O (pointer array: 1)
+    # synchronization parameters
+    escape_retries: int = 8      # CIDER: optimistic retry budget before the
+                                 # client re-runs the mode decision (see
+                                 # DESIGN.md implementation notes)
+    backoff_cap: int = 6         # SPIN truncated exponential backoff
+    # factor-analysis switches (Fig 20)
+    wc_off: bool = False         # CIDER w/o global WC (contention-aware only)
+    cas_off: bool = False        # CIDER w/o contention-aware (always pess.)
+    local_wc: bool = True        # local write combining (baselines, §5.1)
+    initial_credit: int = 36     # §4.3 / Fig 15
+    hotness_threshold: int = 2
+    aimd_factor: int = 2
+    # tables
+    h_bits: int = 14             # key-state hash table (2^14)
+    hc_bits: int = 10            # per-CN credit table
+    hl_bits: int = 10            # per-CN local-WC table
+    hist_buckets: int = 2048     # latency histogram (1 us buckets)
+    # fault tolerance (§4.6)
+    fail_lane: int = -1          # lane that dies ...
+    fail_tick: int = -1          # ... at this tick (-1 = no failure)
+    max_wait: int = 4096         # deadlock detection: max lock-hold duration
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class NetState:
+    backlog: jax.Array       # () i32 — queued MN verbs
+    byte_backlog: jax.Array  # () i32 — queued MN bytes
+    addr_backlog: jax.Array  # (H,) i32 — queued same-address atomics
+
+
+def net_init(h_size: int) -> NetState:
+    z = jnp.zeros((), jnp.int32)
+    return NetState(backlog=z, byte_backlog=z,
+                    addr_backlog=jnp.zeros((h_size,), jnp.int32))
+
+
+def issue_mn(net: NetState, t, issue: jax.Array, nbytes: jax.Array,
+             cost: jax.Array, is_atomic: jax.Array, hkey: jax.Array,
+             p: SimParams) -> tuple[NetState, jax.Array]:
+    """Issue MN verbs for masked lanes; returns (net', completion_tick).
+
+    ``issue``: (N,) bool; ``nbytes``: (N,) i32 wire bytes; ``cost``: (N,) i32
+    capacity tokens; ``is_atomic``/``hkey``: same-address serialization —
+    concurrent atomics on one (hashed) address are limited to
+    ``addr_atomic_cap`` per tick, with their own per-address FIFO backlog.
+    Global queueing: FIFO by lane id within the tick, behind the backlog.
+    """
+    H = net.addr_backlog.shape[0]
+    c = jnp.where(issue, cost, 0)
+    rank = jnp.cumsum(c) - c
+    iops_delay = (net.backlog + rank) // p.mn_cap
+    nb_m = jnp.where(issue, nbytes, 0)
+    byte_rank = jnp.cumsum(nb_m) - nb_m
+    bw_delay = (net.byte_backlog + byte_rank) // p.mn_bw
+    # per-address atomic serialization
+    atom = issue & is_atomic
+    ah = jnp.where(atom, hkey, H)
+    ids = jnp.arange(issue.shape[0], dtype=jnp.int32)
+    order = jnp.lexsort((ids, ah))
+    ahs = ah[order]
+    is_first = jnp.concatenate([jnp.ones((1,), bool), ahs[1:] != ahs[:-1]])
+    pos = jnp.arange(issue.shape[0], dtype=jnp.int32)
+    arank_sorted = pos - jax.lax.cummax(jnp.where(is_first, pos, 0))
+    arank = jnp.zeros_like(pos).at[order].set(arank_sorted)
+    addr_delay = jnp.where(
+        atom, (net.addr_backlog[jnp.clip(hkey, 0, H - 1)] + arank)
+        // p.addr_atomic_cap, 0)
+    delay = jnp.maximum(jnp.maximum(iops_delay, bw_delay), addr_delay)
+    done_at = t + p.rtt + jnp.where(issue, delay, 0)
+    arrivals = jnp.zeros((H,), jnp.int32).at[ah].add(1, mode="drop")
+    net2 = NetState(
+        backlog=jnp.maximum(net.backlog + jnp.sum(c) - p.mn_cap, 0),
+        byte_backlog=jnp.maximum(net.byte_backlog + jnp.sum(nb_m) - p.mn_bw, 0),
+        addr_backlog=jnp.maximum(net.addr_backlog + arrivals - p.addr_atomic_cap, 0),
+    )
+    return net2, done_at.astype(jnp.int32)

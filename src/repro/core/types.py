@@ -1,0 +1,137 @@
+"""Core types shared by the CIDER dataplane engine and the protocol simulator.
+
+The paper's op vocabulary (§2.2): SEARCH / INSERT / UPDATE / DELETE over a
+store of data pointers; IDU = {INSERT, UPDATE, DELETE}.  One-sided RDMA verbs
+(§2.1): READ / WRITE / CAS / FAA / masked-CAS (get-and-set).  We meter each
+verb class separately because the paper's bottleneck argument is on
+memory-node (MN) NIC *IOPS*, with client-to-client (CN<->CN) messages
+explicitly off the MN NIC (the whole point of ShiftLock's handoff design).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "OpKind", "Verb", "SyncMode", "IOMetrics", "EngineConfig", "OpBatch",
+    "NULL_PTR", "io_zeros", "io_add",
+]
+
+# A null data pointer (empty slot). Pointers are int32 heap indices >= 0.
+NULL_PTR = jnp.int32(-1)
+
+
+class OpKind(enum.IntEnum):
+    SEARCH = 0
+    INSERT = 1
+    UPDATE = 2
+    DELETE = 3
+    NOP = 4      # padding
+
+
+class Verb(enum.IntEnum):
+    """RDMA verb classes, for I/O metering."""
+    READ = 0
+    WRITE = 1
+    CAS = 2          # includes masked-CAS (get-and-set) — same NIC cost
+    FAA = 3
+    CN_MSG = 4       # client<->client message: does NOT consume MN NIC IOPS
+
+
+class SyncMode(enum.IntEnum):
+    """The four synchronization schemes compared in the paper (§5.1)."""
+    OSYNC = 0     # optimistic: out-of-place write + CAS-retry     (RACE/SMART default)
+    SPIN = 1      # CAS spinlock w/ truncated exponential backoff  (SMART-framework lock)
+    MCS = 2       # ShiftLock distributed MCS lock, no combining   (FAST'25)
+    CIDER = 3     # MCS + global write-combining + contention-aware sync (this paper)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class IOMetrics:
+    """Per-verb I/O counters. ``mn_iops``/``mn_bytes`` are the bottleneck
+    quantities (memory-pool NIC); ``cn_msgs`` ride client NICs."""
+    reads: jax.Array      # () i64
+    writes: jax.Array
+    cas: jax.Array
+    faa: jax.Array
+    cn_msgs: jax.Array
+    mn_bytes: jax.Array   # bytes moved through MN NICs
+    retries: jax.Array    # redundant (failed) CAS attempts — paper Fig 1 metric
+    combined: jax.Array   # ops whose write was combined away (WC rate numerator)
+    executed: jax.Array   # ops that reached the store
+
+    @property
+    def mn_iops(self) -> jax.Array:
+        return self.reads + self.writes + self.cas + self.faa
+
+    def as_dict(self) -> dict[str, Any]:
+        d = {f.name: np.asarray(getattr(self, f.name)).item()
+             for f in dataclasses.fields(self)}
+        d["mn_iops"] = d["reads"] + d["writes"] + d["cas"] + d["faa"]
+        return d
+
+
+def io_zeros() -> IOMetrics:
+    z = jnp.zeros((), jnp.int64) if jax.config.jax_enable_x64 else jnp.zeros((), jnp.int32)
+    return IOMetrics(*([z] * 9))
+
+
+def io_add(a: IOMetrics, b: IOMetrics) -> IOMetrics:
+    return jax.tree.map(lambda x, y: x + y, a, b)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class OpBatch:
+    """A device batch of concurrent KV ops (one synchronization window).
+
+    ``keys`` here are *slot indices* into the pointer store — index structures
+    (hash / radix tree) resolve string keys to slots first and account their
+    own I/O.  ``pos`` is the canonical serialization priority inside the batch
+    (queue order == batch position, so all four modes agree on the final
+    state: last-writer-wins by ``pos``).  ``cn`` is the compute-node id of the
+    issuing client (local-WC combines within a CN; global WC across CNs).
+    """
+    kinds: jax.Array    # (B,) int32 OpKind
+    keys: jax.Array     # (B,) int32 slot index
+    values: jax.Array   # (B,) int32 value payload id
+    pos: jax.Array      # (B,) int32 serialization priority (0..B-1)
+    cn: jax.Array       # (B,) int32 compute-node id
+
+    @staticmethod
+    def make(kinds, keys, values, n_cns: int = 1, lanes_per_cn: int | None = None):
+        kinds = jnp.asarray(kinds, jnp.int32)
+        keys = jnp.asarray(keys, jnp.int32)
+        values = jnp.asarray(values, jnp.int32)
+        b = kinds.shape[0]
+        pos = jnp.arange(b, dtype=jnp.int32)
+        if lanes_per_cn is None:
+            lanes_per_cn = max(b // max(n_cns, 1), 1)
+        cn = (pos // lanes_per_cn) % max(n_cns, 1)
+        return OpBatch(kinds=kinds, keys=keys, values=values, pos=pos, cn=cn)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Static configuration for the dataplane engine."""
+    n_slots: int                      # pointer-array length
+    heap_slots: int                   # out-of-place heap capacity (values)
+    mode: SyncMode = SyncMode.CIDER
+    local_wc: bool = True             # local write combining (baselines get it too, §5.1)
+    value_bytes: int = 8              # payload size (paper: 8B values)
+    ptr_bytes: int = 8                # data pointer (60-bit ptr + 4-bit version)
+    lock_bytes: int = 16              # lock entry: 60b tail + 64b epoch + 4b version
+    index_read_iops: int = 1          # per-op index I/O (pointer array: 1 READ)
+    index_read_bytes: int = 8
+    # CIDER contention-aware parameters (§4.3, Fig 15)
+    initial_credit: int = 36
+    hotness_threshold: int = 2
+    aimd_factor: int = 2
+    # SPIN backoff cap (truncated exponential), in poll-interval rounds
+    backoff_cap: int = 6

@@ -1,0 +1,64 @@
+"""Launcher-level fault tolerance — the paper's epoch protocol (§4.6) lifted
+to the training fleet.
+
+Each worker FAAs a heartbeat epoch after every step (exactly the lock-epoch
+discipline: progress == epoch advance).  The monitor declares a worker dead
+when its epoch is stale for ``max_wait_s`` — the deadlock-detection rule —
+then shrinks the active set and signals a restore-from-checkpoint onto the
+surviving mesh (elastic restore, see ``repro.ckpt``).  Straggler mitigation:
+per-step deadline = ``straggler_factor`` x the EWMA step time; a worker that
+repeatedly misses it is excluded (same mechanism, softer penalty).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+__all__ = ["Heartbeat", "FleetMonitor"]
+
+
+@dataclasses.dataclass
+class Heartbeat:
+    worker: int
+    epoch: int = 0
+    t: float = 0.0
+
+    def beat(self, now: float | None = None):
+        self.epoch += 1                      # the RDMA_FAA analogue
+        self.t = time.monotonic() if now is None else now
+
+
+class FleetMonitor:
+    def __init__(self, n_workers: int, max_wait_s: float = 60.0,
+                 straggler_factor: float = 3.0, strikes: int = 3):
+        self.hb = {w: Heartbeat(w) for w in range(n_workers)}
+        self.max_wait_s = max_wait_s
+        self.straggler_factor = straggler_factor
+        self.strikes = strikes
+        self._miss: dict[int, int] = dict.fromkeys(range(n_workers), 0)
+        self._ewma: float | None = None
+        self.excluded: set[int] = set()
+
+    def beat(self, worker: int, step_time_s: float | None = None,
+             now: float | None = None):
+        self.hb[worker].beat(now)
+        if step_time_s is not None:
+            self._ewma = step_time_s if self._ewma is None \
+                else 0.9 * self._ewma + 0.1 * step_time_s
+            if self._ewma and step_time_s > self.straggler_factor * self._ewma:
+                self._miss[worker] += 1
+                if self._miss[worker] >= self.strikes:
+                    self.excluded.add(worker)   # straggler: route around it
+            else:
+                self._miss[worker] = 0
+
+    def dead_workers(self, now: float | None = None) -> list[int]:
+        """Epoch stale for max_wait -> deadlock/death declared (§4.6)."""
+        now = time.monotonic() if now is None else now
+        return [w for w, h in self.hb.items()
+                if w not in self.excluded and h.epoch > 0
+                and now - h.t > self.max_wait_s]
+
+    def active_set(self, now: float | None = None) -> list[int]:
+        dead = set(self.dead_workers(now))
+        return [w for w in self.hb if w not in dead and w not in self.excluded]

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel ships as <name>/<name>.py (pl.pallas_call + BlockSpec VMEM
+tiling), ops.py (jit'd wrapper + shape checks + interpret switch) and
+ref.py (pure-jnp oracle); tests sweep shapes/dtypes with interpret=True.
+
+* flash_attention — blockwise-softmax GQA attention (train/prefill)
+* paged_attention — block-table-indirected decode attention over the
+  CIDER-managed page pool (scalar-prefetch grid)
+* wc_combine      — the paper's global write-combining sweep (detect +
+  rank wait queues over a sorted key run in one VMEM pass)
+"""

@@ -1,0 +1,27 @@
+"""Jit'd public wrapper for the flash_attention kernel (shape checks +
+interpret switch; interpret=True is the validated CPU path, False targets
+real TPU)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+__all__ = ["flash_attention_op", "flash_attention_ref"]
+
+
+def flash_attention_op(q, k, v, *, causal=True, window=0, block_q=128,
+                       block_k=128, interpret=None):
+    b, h, s, d = q.shape
+    if k.shape != v.shape or k.shape[0] != b or k.shape[2] != s:
+        raise ValueError(f"kv shape mismatch: {k.shape} vs q {q.shape}")
+    if h % k.shape[1]:
+        raise ValueError(f"q heads {h} not a multiple of kv heads {k.shape[1]}")
+    if s % min(block_q, s) or s % min(block_k, s):
+        raise ValueError(f"seq {s} not divisible by blocks {block_q}/{block_k}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           block_q=block_q, block_k=block_k,
+                           interpret=interpret)

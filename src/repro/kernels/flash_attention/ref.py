@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash_attention kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B, H, S, D); k/v: (B, KH, S, D) -> (B, H, S, D)."""
+    b, h, s, d = q.shape
+    kh = k.shape[1]
+    if kh != h:
+        k = jnp.repeat(k, h // kh, axis=1)
+        v = jnp.repeat(v, h // kh, axis=1)
+    sc = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) * d ** -0.5
+    qp, kp = jnp.arange(s), jnp.arange(s)
+    valid = jnp.ones((s, s), bool)
+    if causal:
+        valid &= kp[None, :] <= qp[:, None]
+    if window:
+        valid &= kp[None, :] > qp[:, None] - window
+    sc = jnp.where(valid[None, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,24 @@
+"""Jit'd wrapper for paged_attention (shape checks + interpret switch)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.paged_attention.paged_attention import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+__all__ = ["paged_attention_op", "paged_attention_ref"]
+
+
+def paged_attention_op(q, k_pages, v_pages, block_table, lengths,
+                       interpret=None):
+    b, h, d = q.shape
+    if k_pages.shape != v_pages.shape:
+        raise ValueError("k/v page pools differ")
+    if h % k_pages.shape[2]:
+        raise ValueError("q heads not a multiple of kv heads")
+    if block_table.shape[0] != b or lengths.shape != (b,):
+        raise ValueError("block_table/lengths batch mismatch")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return paged_attention(q, k_pages, v_pages, block_table, lengths,
+                           interpret=interpret)

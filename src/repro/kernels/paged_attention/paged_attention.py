@@ -1,0 +1,98 @@
+"""Paged decode-attention Pallas kernel.
+
+One new token attends over a block-table-indirected paged KV cache — the
+CIDER-managed page store (DESIGN.md §2.1): pages live in a global pool
+(HBM); each sequence's ``block_table`` row lists its pages in order.
+
+Grid: (batch, kv_heads, n_pages); the page blocks of k/v are gathered via a
+``PrefetchScalarGridSpec`` index map reading the block table — the kernel
+never sees a dense (B, Smax) cache.  Running (m, l, acc) scratch carries
+across the page dimension; pages at or beyond ``ceil(length/page)`` are
+masked out entirely.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, page: int, n_pages: int, g: int,
+            scale: float):
+    bi = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[bi]
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (g, d)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (page, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (g, page)
+    pos = pi * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+    s = jnp.where(pos < length, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    m_ref[...] = m_new
+
+    @pl.when(pi == n_pages - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pages, v_pages, block_table, lengths, *,
+                    interpret=False):
+    """q: (B, H, D); k/v_pages: (NPOOL, page, KH, D); block_table: (B, NP)
+    i32 page ids; lengths: (B,) i32.  Returns (B, H, D)."""
+    b, h, d = q.shape
+    npool, page, kh, _ = k_pages.shape
+    np_ = block_table.shape[1]
+    g = h // kh
+    qg = q.reshape(b, kh, g, d)
+    kp = k_pages.transpose(0, 2, 1, 3)                   # (NPOOL, KH, page, D)
+    vp = v_pages.transpose(0, 2, 1, 3)
+    kernel = functools.partial(_kernel, page=page, n_pages=np_, g=g,
+                               scale=d ** -0.5)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,                       # block_table, lengths
+            grid=(b, kh, np_),
+            in_specs=[
+                pl.BlockSpec((1, 1, g, d),
+                             lambda bi, hi, pi, bt, ln: (bi, hi, 0, 0)),
+                pl.BlockSpec((1, 1, page, d),
+                             lambda bi, hi, pi, bt, ln: (bt[bi, pi], hi, 0, 0)),
+                pl.BlockSpec((1, 1, page, d),
+                             lambda bi, hi, pi, bt, ln: (bt[bi, pi], hi, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, d),
+                                   lambda bi, hi, pi, bt, ln: (bi, hi, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g, d), jnp.float32),
+                pltpu.VMEM((g,), jnp.float32),
+                pltpu.VMEM((g,), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, d), q.dtype),
+        interpret=interpret,
+    )(block_table, lengths, qg, kp, vp)
+    return out.reshape(b, h, d)

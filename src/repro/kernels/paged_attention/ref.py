@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for paged_attention: densify the pages, then softmax."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_table, lengths):
+    b, h, d = q.shape
+    npool, page, kh, _ = k_pages.shape
+    np_ = block_table.shape[1]
+    g = h // kh
+    # densify: (B, NP*page, KH, D)
+    kd = k_pages[block_table].reshape(b, np_ * page, kh, d)
+    vd = v_pages[block_table].reshape(b, np_ * page, kh, d)
+    qg = q.reshape(b, kh, g, d).astype(jnp.float32) * d ** -0.5
+    sc = jnp.einsum("bkgd,bskd->bkgs", qg, kd.astype(jnp.float32))
+    pos = jnp.arange(np_ * page)
+    sc = jnp.where(pos[None, None, None, :] < lengths[:, None, None, None],
+                   sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, vd.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)

@@ -1,0 +1,22 @@
+"""Jit'd wrapper for wc_combine."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wc_combine.ref import wc_combine_ref
+from repro.kernels.wc_combine.wc_combine import wc_combine
+
+__all__ = ["wc_combine_op", "wc_combine_ref"]
+
+
+def wc_combine_op(keys_sorted, block=1024, interpret=None):
+    if keys_sorted.dtype != jnp.int32:
+        keys_sorted = keys_sorted.astype(jnp.int32)
+    n = keys_sorted.shape[0]
+    block = min(block, n)
+    if n % block:
+        raise ValueError(f"N={n} not divisible by block={block}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return wc_combine(keys_sorted, block=block, interpret=interpret)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for wc_combine (same contract as core.combine)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wc_combine_ref(keys_sorted):
+    n = keys_sorted.shape[0]
+    k = keys_sorted
+    first = jnp.concatenate([jnp.ones((1,), bool), k[1:] != k[:-1]])
+    last = jnp.concatenate([k[1:] != k[:-1], jnp.ones((1,), bool)])
+    idx = jnp.arange(n, dtype=jnp.int32)
+    start = jax.lax.cummax(jnp.where(first, idx, 0))
+    rank = idx - start
+    return first, last, rank

@@ -1,0 +1,81 @@
+"""Global write-combining Pallas kernel: one VMEM pass over a SORTED key run
+emitting, per element, (is_first, is_last, rank) — the materialized wait
+queues of §4.2 (detect + combine in one sweep).
+
+Cross-block runs are handled by a sequential grid with a carry scratch
+(previous block's last key + its accumulated run length): TPU grid execution
+is ordered, so block i reads the carry block i-1 wrote.
+
+Used by: the dataplane engine (combine path), the MoE dispatch
+(rank-within-expert), and the embedding-gradient combiner.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(keys_ref, first_ref, last_ref, rank_ref, carry_ref, *,
+            block: int, n_blocks: int):
+    bi = pl.program_id(0)
+
+    @pl.when(bi == 0)
+    def _init():
+        carry_ref[0] = jnp.int32(-2**31 + 1)   # "no previous key"
+        carry_ref[1] = jnp.int32(0)            # run length so far
+
+    k = keys_ref[...]                          # (block,)
+    prev_key = carry_ref[0]
+    prev_len = carry_ref[1]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (block, 1), 0)[:, 0]
+    kprev = jnp.where(idx == 0, prev_key, jnp.roll(k, 1))
+    first = k != kprev
+    # rank within run: idx - start_of_run (+ carry for a continued first run)
+    start = jax.lax.cummax(jnp.where(first, idx, jnp.int32(-2**31 + 1)))
+    in_carry_run = start == (-2**31 + 1)       # run continues from prev block
+    rank = jnp.where(in_carry_run, idx + prev_len, idx - start)
+    # is_last: next element differs (last block: trailing element is last)
+    knext = jnp.where(idx == block - 1, jnp.int32(-2**31 + 2), jnp.roll(k, -1))
+    last = k != knext
+    first_ref[...] = first
+    last_ref[...] = last
+    rank_ref[...] = rank
+    # carry out: last key + length of its (possibly continued) run
+    tail_rank = rank[block - 1] + 1
+    carry_ref[0] = k[block - 1]
+    carry_ref[1] = tail_rank
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def wc_combine(keys_sorted, *, block=1024, interpret=False):
+    """keys_sorted: (N,) int32 ascending.  Returns (is_first, is_last, rank).
+    The final element of block i and first of block i+1 are stitched via the
+    sequential carry, so ``is_last``/``rank`` are globally correct except
+    that is_last at a block boundary is resolved by the NEXT block's
+    is_first — callers get exact semantics via the returned pair:
+    element i is a true run tail iff is_last[i] and (i == N-1 or
+    is_first[i+1]); the wrapper fixes this up (cheap elementwise pass)."""
+    n = keys_sorted.shape[0]
+    block = min(block, n)
+    n_blocks = n // block
+    kernel = functools.partial(_kernel, block=block, n_blocks=n_blocks)
+    first, last, rank = pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                   pl.BlockSpec((block,), lambda i: (i,)),
+                   pl.BlockSpec((block,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.bool_),
+                   jax.ShapeDtypeStruct((n,), jnp.bool_),
+                   jax.ShapeDtypeStruct((n,), jnp.int32)],
+        scratch_shapes=[pltpu.SMEM((2,), jnp.int32)],
+        interpret=interpret,
+    )(keys_sorted)
+    # stitch block boundaries: i is a tail iff the next element starts a run
+    nxt_first = jnp.concatenate([first[1:], jnp.ones((1,), bool)])
+    return first, last & nxt_first, rank

@@ -1,0 +1,207 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, record memory/cost/collective analysis (deliverable e).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+        --cell train_4k --mesh single --out results/dryrun
+
+Results are cached per cell as JSON so the sweep is resumable.  The two
+XLA_FLAGS lines above MUST stay the first statements: jax locks the device
+count on first init, and only the dry-run wants 512 host devices.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.dist.ctx import use_mesh
+from repro.dist.sharding import (batch_shardings, decode_state_shardings,
+                                 param_shardings)
+from repro.launch.mesh import make_production_mesh
+from repro.models.common import unbox
+from repro.models.model import Model
+from repro.rooflines.hlo_parser import parse_hlo
+from repro.rooflines.roofline import model_flops, roofline
+from repro.train.optimizer import OptState, adamw_init, adamw_update
+
+SHAPES = {
+    "train_4k": ("train", 4096, 256),
+    "prefill_32k": ("prefill", 32768, 32),
+    "decode_32k": ("decode", 32768, 128),
+    "long_500k": ("decode", 524288, 1),
+}
+
+
+def cell_supported(cfg, cell: str) -> tuple[bool, str]:
+    kind = SHAPES[cell][0]
+    if kind == "decode" and not cfg.has_decode:
+        return False, "encoder-only: no decode step"
+    if cell == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full attention: 500k decode skipped (DESIGN.md)"
+    return True, ""
+
+
+def make_train_step(model):
+    def train_step(params, opt, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss_fn, has_aux=True)(params, batch)
+        params2, opt2, gnorm = adamw_update(params, grads, opt)
+        return params2, opt2, {"loss": loss, "gnorm": gnorm}
+    return train_step
+
+
+def lower_cell(arch: str, cell: str, multi_pod: bool):
+    cfg = get_config(arch)
+    kind, seq, gb = SHAPES[cell]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = Model(cfg)
+    boxed = model.init_abstract()
+    psh = param_shardings(boxed, mesh)
+    pspec = unbox(boxed)
+    if kind == "train":
+        ospec = jax.eval_shape(adamw_init, pspec)
+        osh = OptState(m=psh, v=psh, step=NamedSharding(mesh, P()))
+        bspec = model.input_specs("train", seq, gb)
+        bsh = batch_shardings(bspec, mesh)
+        fn = make_train_step(model)
+        with mesh, use_mesh(mesh):
+            lowered = jax.jit(fn, in_shardings=(psh, osh, bsh)).lower(
+                pspec, ospec, bspec)
+    elif kind == "prefill":
+        bspec = model.input_specs("prefill", seq, gb)
+        bsh = batch_shardings(bspec, mesh)
+        if cfg.family == "encoder":
+            def fn(params, batch):
+                from repro.models import transformer as tfm
+                logits, _, _ = tfm.forward(cfg, params, batch["tokens"],
+                                           batch.get("frontend"))
+                return logits
+        else:
+            def fn(params, batch):
+                return model.prefill(params, batch["tokens"],
+                                     batch.get("frontend"))
+        with mesh, use_mesh(mesh):
+            lowered = jax.jit(fn, in_shardings=(psh, bsh)).lower(pspec, bspec)
+    else:  # decode
+        specs = model.input_specs("decode", seq, gb)
+        ssh = decode_state_shardings(specs["state"], mesh)
+        tsh = NamedSharding(mesh, P(("pod", "data") if multi_pod else "data"))
+        if gb % (mesh.shape.get("pod", 1) * mesh.shape["data"]) != 0:
+            tsh = NamedSharding(mesh, P())
+
+        def fn(params, state, token, pos):
+            return model.decode_step(params, state, token, pos)
+
+        with mesh, use_mesh(mesh):
+            lowered = jax.jit(fn, in_shardings=(
+                psh, ssh, tsh, NamedSharding(mesh, P()))).lower(
+                pspec, specs["state"], specs["token"], specs["pos"])
+    return cfg, model, mesh, lowered
+
+
+def run_cell(arch: str, cell: str, multi_pod: bool, outdir: str) -> dict:
+    tag = f"{arch}__{cell}__{'multi' if multi_pod else 'single'}"
+    path = os.path.join(outdir, tag + ".json")
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    cfg = get_config(arch)
+    ok, why = cell_supported(cfg, cell)
+    rec = {"arch": arch, "cell": cell,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "chips": 512 if multi_pod else 256}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+    else:
+        t0 = time.time()
+        try:
+            cfg, model, mesh, lowered = lower_cell(arch, cell, multi_pod)
+            compiled = lowered.compile()
+            t1 = time.time()
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis() or {}
+            hlo = compiled.as_text()
+            parsed = parse_hlo(hlo)
+            kind, seq, gb = SHAPES[cell]
+            n_params = model.n_params()
+            mf = model_flops(cfg, kind, seq, gb, n_params)
+            terms = roofline(parsed.dot_flops, parsed.hbm_bytes,
+                             parsed.coll_bytes, mf, rec["chips"])
+            rec.update(
+                status="ok", compile_s=round(t1 - t0, 1),
+                n_params=n_params,
+                xla_flops=float(cost.get("flops", -1.0)),
+                bytes_per_chip=_mem_dict(mem),
+                hlo_dot_flops_per_chip=parsed.dot_flops,
+                hlo_hbm_bytes_per_chip=parsed.hbm_bytes,
+                coll_bytes_per_chip=parsed.coll_bytes,
+                coll_by_kind=parsed.coll_by_kind,
+                n_collectives=parsed.n_collectives,
+                trip_counts=parsed.trip_counts,
+                model_flops=mf,
+                roofline=terms.row(),
+            )
+        except Exception as e:  # noqa: BLE001 — a failed cell is a bug report
+            rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                       trace=traceback.format_exc()[-2000:])
+    os.makedirs(outdir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--cell", default="all", choices=list(SHAPES) + ["all"])
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+    archs = ALL_ARCHS if args.arch == "all" else [args.arch]
+    cells = list(SHAPES) if args.cell == "all" else [args.cell]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for cell in cells:
+            for mp in meshes:
+                rec = run_cell(arch, cell, mp, args.out)
+                s = rec["status"]
+                n_ok += s == "ok"
+                n_skip += s == "skipped"
+                n_err += s == "error"
+                line = f"[{s:7s}] {arch:22s} {cell:12s} {rec['mesh']:8s}"
+                if s == "ok":
+                    r = rec["roofline"]
+                    line += (f" compile={rec['compile_s']:6.1f}s"
+                             f" bott={r['bottleneck']:10s}"
+                             f" frac={r['roofline_fraction']:.3f}")
+                elif s == "error":
+                    line += " " + rec["error"][:80]
+                print(line, flush=True)
+    print(f"\nDRYRUN ok={n_ok} skipped={n_skip} errors={n_err}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Production mesh builders (kept as FUNCTIONS so importing this module never
+touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod (v5e); multi_pod adds a leading 2-pod axis.
+    The ``pod`` axis composes with ``data`` for all batch/FSDP sharding, so
+    scaling pods is a config change, not a code change."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """Single-device mesh with the production axis names (CPU tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,171 @@
+"""Grouped-query attention: chunked-flash training/prefill path + cached
+decode path.
+
+GQA is computed by repeating KV heads up to the full query head count before
+the chunked softmax — per chip this costs nothing extra once heads are
+tensor-sharded (each chip materializes only its own head slice) and it keeps
+the head axis shardable through the whole attention body (a (kh, g) reshape
+would break 16-way sharding of 8 kv heads).
+
+The training path is a pure-jnp blockwise-softmax ("flash") implementation —
+O(S) live memory, no S x S score tensor — which doubles as the numerical
+oracle for the Pallas kernel in ``repro.kernels.flash_attention`` (used on
+real TPU; this module is the portable fallback and the dry-run path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.ctx import shard
+
+__all__ = ["gqa_attention", "decode_attention"]
+
+NEG_INF = -1e30
+
+
+def _mask_block(qi, ki, qc, kc, causal, window):
+    q_pos = qi * qc + jnp.arange(qc)
+    k_pos = ki * kc + jnp.arange(kc)
+    valid = jnp.ones((qc, kc), bool)
+    if causal:
+        valid &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        valid &= k_pos[None, :] > q_pos[:, None] - window
+    return valid
+
+
+def _flash_fwd_impl(q, k, v, causal, window, qc, kc):
+    """Chunked forward returning (out, lse); all (b, s, h, *) f32 inputs."""
+    b, s, h, d = q.shape
+    n_q, n_k = s // qc, s // kc
+    qr = q.reshape(b, n_q, qc, h, d).transpose(1, 0, 2, 3, 4)
+    qr = shard(qr, (None, "act_batch", None, "act_heads", None))
+    kr = shard(k.reshape(b, n_k, kc, h, d),
+               ("act_batch", None, None, "act_heads", None))
+    vr = shard(v.reshape(b, n_k, kc, h, d),
+               ("act_batch", None, None, "act_heads", None))
+
+    def per_qchunk(qi, qblk):
+        def step(carry, ki):
+            acc, m_run, l_run = carry
+            kblk = jax.lax.dynamic_index_in_dim(kr, ki, 1, keepdims=False)
+            vblk = jax.lax.dynamic_index_in_dim(vr, ki, 1, keepdims=False)
+            sc = jnp.einsum("bqhd,bchd->bqhc", qblk, kblk)
+            valid = _mask_block(qi, ki, qc, kc, causal, window)
+            sc = jnp.where(valid[None, :, None, :], sc, NEG_INF)
+            m_new = jnp.maximum(m_run, sc.max(-1))
+            p = jnp.exp(sc - m_new[..., None])
+            alpha = jnp.exp(m_run - m_new)
+            l_new = l_run * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bqhc,bchd->bqhd", p.astype(vblk.dtype), vblk)
+            return (acc, m_new, l_new), None
+
+        init = (jnp.zeros((b, qc, h, d), jnp.float32),
+                jnp.full((b, qc, h), NEG_INF),
+                jnp.zeros((b, qc, h), jnp.float32))
+        (acc, m_run, l_run), _ = jax.lax.scan(step, init, jnp.arange(n_k))
+        out = acc / jnp.maximum(l_run[..., None], 1e-30)
+        lse = m_run + jnp.log(jnp.maximum(l_run, 1e-30))
+        return out, lse
+
+    out, lse = jax.vmap(per_qchunk)(jnp.arange(n_q), qr)
+    out = shard(out, (None, "act_batch", None, "act_heads", None))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, s, h, d)
+    lse = lse.transpose(1, 0, 2, 3).reshape(b, s, h)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal, window, qc, kc):
+    return _flash_fwd_impl(q, k, v, causal, window, qc, kc)[0]
+
+
+def _flash_vjp_fwd(q, k, v, causal, window, qc, kc):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, qc, kc)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_vjp_bwd(causal, window, qc, kc, res, do):
+    """FlashAttention backward: recompute scores per (q, k) chunk pair from
+    O(S) residuals (q, k, v, out, lse) — no S x S tensor is ever SAVED
+    between forward and backward (beyond-paper §Perf optimization)."""
+    q, k, v, out, lse = res
+    b, s, h, d = q.shape
+    n_q = s // qc
+    do = do.astype(jnp.float32)
+    delta = jnp.sum(do * out, axis=-1)                      # (b, s, h)
+
+    def qstep(carry, qi):
+        dk_acc, dv_acc = carry
+        sl = (qi * qc, 0, 0)
+        qblk = jax.lax.dynamic_slice(q, (0, qi * qc, 0, 0), (b, qc, h, d))
+        doblk = jax.lax.dynamic_slice(do, (0, qi * qc, 0, 0), (b, qc, h, d))
+        lseblk = jax.lax.dynamic_slice(lse, (0, qi * qc, 0), (b, qc, h))
+        dblk = jax.lax.dynamic_slice(delta, (0, qi * qc, 0), (b, qc, h))
+        sc = jnp.einsum("bqhd,bshd->bqhs", qblk, k)         # (b, qc, h, S)
+        q_pos = qi * qc + jnp.arange(qc)
+        k_pos = jnp.arange(s)
+        valid = jnp.ones((qc, s), bool)
+        if causal:
+            valid &= k_pos[None, :] <= q_pos[:, None]
+        if window:
+            valid &= k_pos[None, :] > q_pos[:, None] - window
+        sc = jnp.where(valid[None, :, None, :], sc, NEG_INF)
+        p = jnp.exp(sc - lseblk[..., None])                 # softmax rows
+        dv_acc = dv_acc + jnp.einsum("bqhs,bqhd->bshd", p, doblk)
+        dp = jnp.einsum("bqhd,bshd->bqhs", doblk, v)
+        ds = p * (dp - dblk[..., None])
+        dq_blk = jnp.einsum("bqhs,bshd->bqhd", ds, k)
+        dk_acc = dk_acc + jnp.einsum("bqhs,bqhd->bshd", ds, qblk)
+        return (dk_acc, dv_acc), dq_blk
+
+    zeros = jnp.zeros((b, s, h, d), jnp.float32)
+    (dk, dv), dq_chunks = jax.lax.scan(qstep, (zeros, zeros),
+                                       jnp.arange(n_q))
+    dq = dq_chunks.transpose(1, 0, 2, 3, 4).reshape(b, s, h, d)
+    return dq, dk, dv
+
+
+_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "chunk"))
+def gqa_attention(q, k, v, *, causal=True, window=0, chunk=1024):
+    """q: (B, S, H, D); k/v: (B, S, K, D) with H % K == 0."""
+    b, s, h, d = q.shape
+    kh = k.shape[2]
+    if kh != h:
+        k = jnp.repeat(k, h // kh, axis=2)
+        v = jnp.repeat(v, h // kh, axis=2)
+    k = shard(k, ("act_batch", None, "act_heads", None))
+    v = shard(v, ("act_batch", None, "act_heads", None))
+    scale = d ** -0.5
+    qc = min(chunk, s)
+    kc = min(chunk, s)
+    out = _flash((q.astype(jnp.float32) * scale), k.astype(jnp.float32),
+                 v.astype(jnp.float32), causal, window, qc, kc)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, length):
+    """One-token decode: q (B, 1, H, D); caches (B, Smax, K, D); attend over
+    positions < ``length``.  Written as plain reductions so XLA SPMD can
+    shard the cache's sequence axis (softmax max/sum lower to all-reduces);
+    ``repro.dist.decode_attn`` provides the one-pass shard_map variant."""
+    b, _, h, d = q.shape
+    kh = k_cache.shape[2]
+    g = h // kh
+    smax = k_cache.shape[1]
+    scale = d ** -0.5
+    qg = q.reshape(b, kh, g, d).astype(jnp.float32) * scale
+    sc = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(jnp.float32))
+    sc = shard(sc, ("act_batch", None, None, "act_cache_seq"))
+    pos = jnp.arange(smax)
+    sc = jnp.where(pos[None, None, None, :] < length, sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q.dtype)

@@ -1,0 +1,85 @@
+"""Shared model building blocks: RMSNorm, RoPE, initializers with logical
+sharding axes.
+
+Every parameter is created through ``Param``/``init_leaf`` which records a
+tuple of *logical axis names* alongside the array; ``repro.dist.sharding``
+maps logical axes -> mesh axes (FSDP/TP/EP) for any mesh shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Param", "ParamTree", "rms_norm", "rope", "apply_rope",
+           "init_dense", "init_embed", "init_scalar", "unbox", "axes_of",
+           "count_params"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Param:
+    """An array + its logical sharding axes (a MaxText-style 'boxed' param)."""
+    value: jax.Array
+    axes: tuple = dataclasses.field(metadata=dict(static=True))
+
+
+ParamTree = Any
+
+
+def unbox(tree: ParamTree):
+    return jax.tree.map(lambda p: p.value if isinstance(p, Param) else p, tree,
+                        is_leaf=lambda x: isinstance(x, Param))
+
+
+def axes_of(tree: ParamTree):
+    return jax.tree.map(lambda p: p.axes if isinstance(p, Param) else None, tree,
+                        is_leaf=lambda x: isinstance(x, Param))
+
+
+def init_dense(key, in_dim, out_dims, axes, dtype=jnp.bfloat16, scale=None):
+    """Fan-in scaled truncated-normal init for a (in, *out) weight."""
+    shape = (in_dim,) + tuple(out_dims)
+    scale = scale if scale is not None else 1.0 / np.sqrt(in_dim)
+    w = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * scale
+    return Param(w.astype(dtype), axes)
+
+
+def init_embed(key, vocab, d, dtype=jnp.bfloat16):
+    w = jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+    return Param(w.astype(dtype), ("vocab", "embed"))
+
+
+def init_scalar(shape, axes, fill=1.0, dtype=jnp.float32):
+    return Param(jnp.full(shape, fill, dtype), axes)
+
+
+def rms_norm(x, gamma, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * gamma).astype(dt)
+
+
+def rope(positions, head_dim, theta=1e4):
+    """Rotary embedding tables: returns (sin, cos) of shape (*pos, head_dim/2)."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                             / head_dim))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x, sin, cos):
+    """x: (..., seq, heads, head_dim); sin/cos: (seq, head_dim/2)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    s = sin[..., :, None, :]
+    c = cos[..., :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], -1)
+
+
+def count_params(tree: ParamTree) -> int:
+    leaves = jax.tree.leaves(unbox(tree))
+    return int(sum(np.prod(l.shape) for l in leaves))

@@ -1,0 +1,34 @@
+"""Modality frontend STUBS (per assignment: ``[audio]``/``[vlm]`` entries are
+backbone-only; ``input_specs()`` provides precomputed frame/patch embeddings).
+
+* audio (hubert): a real system would run the conv feature encoder over
+  16 kHz waveforms (49 Hz frames); here ``input_specs`` supplies
+  (B, S, frontend_dim) frame embeddings directly.
+* vision (phi-3-vision): a real system would run CLIP ViT-L/14 over image
+  crops; here ``input_specs`` supplies (B, n_patches, frontend_dim) patch
+  embeddings directly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+__all__ = ["frontend_spec", "fake_frontend_batch"]
+
+
+def frontend_spec(cfg: ModelConfig, batch: int, seq: int):
+    if cfg.frontend == "audio":
+        return jax.ShapeDtypeStruct((batch, seq, cfg.frontend_dim), jnp.bfloat16)
+    if cfg.frontend == "vision":
+        return jax.ShapeDtypeStruct((batch, cfg.n_patches, cfg.frontend_dim),
+                                    jnp.bfloat16)
+    return None
+
+
+def fake_frontend_batch(cfg: ModelConfig, key, batch: int, seq: int):
+    spec = frontend_spec(cfg, batch, seq)
+    if spec is None:
+        return None
+    return jax.random.normal(key, spec.shape, jnp.float32).astype(spec.dtype)

@@ -1,0 +1,16 @@
+"""Gated MLP (SwiGLU) — the dense FFN used by every assigned transformer."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["swiglu", "gelu_mlp"]
+
+
+def swiglu(x, wi_gate, wi_up, wo):
+    h = jax.nn.silu(x @ wi_gate) * (x @ wi_up)
+    return h @ wo
+
+
+def gelu_mlp(x, wi, wo):
+    return jax.nn.gelu(x @ wi) @ wo

@@ -1,0 +1,121 @@
+"""The public Model API: init / train_step-ready loss / prefill / decode +
+ShapeDtypeStruct input specs for the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.common import axes_of, count_params, unbox
+from repro.models.config import ModelConfig
+from repro.models.frontend import frontend_spec
+
+__all__ = ["Model", "cross_entropy"]
+
+
+def cross_entropy(logits, targets, mask=None):
+    """Token CE in f32 with logsumexp (vocab may be sharded)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()
+
+
+class Model:
+    """Thin functional wrapper binding a ModelConfig to the transformer fns."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ---- parameters ----
+    def init(self, key):
+        return tfm.init_params(self.cfg, key)
+
+    def init_abstract(self):
+        """Boxed param tree of ShapeDtypeStructs (no allocation) + axes."""
+        shapes = jax.eval_shape(lambda: tfm.init_params(
+            self.cfg, jax.random.key(0)))
+        return shapes
+
+    def param_axes(self):
+        return axes_of(self.init_abstract())
+
+    def n_params(self) -> int:
+        import numpy as np
+        boxed = self.init_abstract()
+        return int(sum(np.prod(l.shape) for l in jax.tree.leaves(unbox(boxed))))
+
+    # ---- training ----
+    def loss_fn(self, params, batch):
+        """params: UNBOXED pytree. batch: {tokens, targets, (frontend)}."""
+        cfg = self.cfg
+        logits, aux, _ = tfm.forward(cfg, params, batch["tokens"],
+                                     batch.get("frontend"))
+        if cfg.frontend and cfg.family != "encoder":
+            # vlm: image-prefix positions carry no next-token loss
+            logits = logits[:, cfg.n_patches:, :]
+        loss = cross_entropy(logits, batch["targets"], batch.get("mask"))
+        if cfg.family == "moe":
+            loss = loss + 0.01 * aux
+        return loss, {"ce": loss, "aux": aux}
+
+    # ---- serving ----
+    def prefill(self, params, tokens, frontend=None):
+        logits, _, caches = tfm.forward(self.cfg, params, tokens, frontend,
+                                        return_cache=True)
+        return logits[:, -1:, :], caches
+
+    def decode_step(self, params, state, token, pos):
+        return tfm.decode_step(self.cfg, params, state, token, pos)
+
+    def init_decode_state(self, batch: int, smax: int):
+        return tfm.init_decode_state(self.cfg, batch, smax)
+
+    def decode_state_spec(self, batch: int, smax: int):
+        return jax.eval_shape(
+            functools.partial(tfm.init_decode_state, self.cfg, batch, smax))
+
+    # ---- dry-run input specs (ShapeDtypeStruct, never allocated) ----
+    def input_specs(self, shape_cell: str, seq: int, global_batch: int
+                    ) -> dict[str, Any]:
+        cfg = self.cfg
+        i32 = jnp.int32
+        if shape_cell == "train":
+            s_text = seq - (cfg.n_patches if cfg.frontend == "vision" else 0)
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((global_batch, s_text), i32),
+                "targets": jax.ShapeDtypeStruct(
+                    (global_batch, s_text if cfg.family != "encoder" else seq),
+                    i32),
+            }
+            fs = frontend_spec(cfg, global_batch, seq)
+            if fs is not None:
+                specs["frontend"] = fs
+            if cfg.family == "encoder":
+                specs["targets"] = jax.ShapeDtypeStruct((global_batch, seq), i32)
+                specs["tokens"] = jax.ShapeDtypeStruct((global_batch, 0), i32)
+            return specs
+        if shape_cell == "prefill":
+            s_text = seq - (cfg.n_patches if cfg.frontend == "vision" else 0)
+            specs = {"tokens": jax.ShapeDtypeStruct((global_batch, s_text), i32)}
+            fs = frontend_spec(cfg, global_batch, seq)
+            if fs is not None:
+                specs["frontend"] = fs
+            if cfg.family == "encoder":
+                specs["tokens"] = jax.ShapeDtypeStruct((global_batch, 0), i32)
+            return specs
+        if shape_cell == "decode":
+            return {
+                "token": jax.ShapeDtypeStruct((global_batch, 1), i32),
+                "pos": jax.ShapeDtypeStruct((), i32),
+                "state": self.decode_state_spec(global_batch, seq),
+            }
+        raise ValueError(shape_cell)

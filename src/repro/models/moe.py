@@ -1,0 +1,129 @@
+"""Mixture-of-Experts layer: shared + routed experts with top-k routing and
+sort-based capacity grouping.
+
+The dispatch is deliberately the SAME primitive as CIDER's global write
+combining (DESIGN.md §2.1): flatten (token, expert) assignments, sort by
+expert, rank-within-run, and gather each expert's tokens into a contiguous
+(E, C, D) block — one grouped matmul per expert instead of per-token traffic.
+Tokens beyond an expert's capacity are dropped (GShard-style); capacity
+defaults to 1.25x the balanced share.
+
+Sharding: experts -> "model" (EP); tokens -> ("pod","data").  With
+``rows > 1`` (the §Perf optimization, default in the launchers) the grouping
+runs PER DATA-SHARD ROW: each row's (E, C_row, D) dispatch buffer is built
+from tokens already resident on that data shard, so the dispatch gather is
+collective-free; the only cross-chip traffic left is the per-layer psum of
+the combined outputs over the model axis.  The baseline (rows=1) sorts
+globally and lets XLA SPMD all-gather the token table — the dry-run shows
+that difference as ~100x collective bytes (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.ctx import shard
+
+__all__ = ["route_topk", "moe_ffn", "moe_capacity"]
+
+
+def moe_capacity(n_tokens: int, n_experts: int, top_k: int,
+                 factor: float = 1.25) -> int:
+    c = int(n_tokens * top_k * factor / n_experts) + 1
+    # 128-aligned: MXU tiles + divisible by the 16-way data axis so the
+    # (E, C, D) dispatch buffer shards over experts AND capacity
+    return max(128, (c + 127) // 128 * 128)
+
+
+def route_topk(logits, top_k):
+    """logits: (T, E) -> (weights (T,k) softmaxed over chosen, experts (T,k))."""
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, ix = jax.lax.top_k(gates, top_k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    return w, ix
+
+
+def _group_by_expert(expert_ids, n_experts, capacity):
+    """expert_ids: (T*k,) -> (slot (T*k,) destination in [0, E*C) or E*C when
+    dropped).  Sort-based ranking — the wc_combine primitive."""
+    tk = expert_ids.shape[0]
+    pos = jnp.arange(tk, dtype=jnp.int32)
+    order = jnp.lexsort((pos, expert_ids))
+    es = expert_ids[order]
+    is_first = jnp.concatenate([jnp.ones((1,), bool), es[1:] != es[:-1]])
+    seg_start = jax.lax.cummax(jnp.where(is_first, pos, 0))
+    rank_sorted = pos - seg_start
+    rank = jnp.zeros((tk,), jnp.int32).at[order].set(rank_sorted)
+    dropped = rank >= capacity
+    slot = jnp.where(dropped, n_experts * capacity,
+                     expert_ids * capacity + rank)
+    return slot.astype(jnp.int32), dropped
+
+
+def _routed_ffn(x, router_w, experts_gate, experts_up, experts_down,
+                top_k: int, cap: int):
+    """Dispatch + grouped expert matmuls + combine for one token block."""
+    t, d = x.shape
+    e = experts_gate.shape[0]
+    logits = x @ router_w                                   # (T, E)
+    w, ix = route_topk(logits, top_k)                       # (T, k)
+    me = jnp.mean(jax.nn.softmax(logits.astype(jnp.float32), -1), axis=0)
+    ce = jnp.zeros((e,), jnp.float32).at[ix.reshape(-1)].add(
+        jnp.ones((t * top_k,), jnp.float32)) / (t * top_k)
+    aux = e * jnp.sum(me * ce)
+    # ---- dispatch: sort-group (the global-WC primitive) ----
+    flat_e = ix.reshape(-1).astype(jnp.int32)               # (T*k,)
+    slot, dropped = _group_by_expert(flat_e, e, cap)
+    src_tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), top_k)
+    tok_of_slot = jnp.full((e * cap + 1,), 0, jnp.int32).at[slot].set(
+        src_tok, mode="drop")
+    filled = jnp.zeros((e * cap + 1,), bool).at[slot].set(
+        ~dropped, mode="drop")
+    xg = jnp.where(filled[:e * cap, None], x[tok_of_slot[:e * cap]], 0)
+    xg = xg.reshape(e, cap, d)
+    # ---- expert computation: grouped matmuls ----
+    h = jnp.einsum("ecd,edf->ecf", xg, experts_gate)
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", xg, experts_up)
+    yg = jnp.einsum("ecf,efd->ecd", h, experts_down)        # (E, C, D)
+    # ---- combine: weighted scatter-add back to tokens ----
+    wk = w.reshape(-1).astype(yg.dtype)
+    y_slot = yg.reshape(e * cap, d)
+    contrib = y_slot[jnp.where(dropped, 0, slot)] * jnp.where(
+        dropped, 0.0, wk)[:, None]
+    y = jnp.zeros((t, d), yg.dtype).at[src_tok].add(contrib)
+    return y, aux
+
+
+@functools.partial(jax.jit, static_argnames=("top_k", "capacity_factor",
+                                             "rows"))
+def moe_ffn(x, router_w, experts_gate, experts_up, experts_down,
+            shared_gate=None, shared_up=None, shared_down=None,
+            *, top_k: int, capacity_factor: float = 1.25, rows: int = 1):
+    """x: (T, D). experts_*: (E, D, F) / (E, F, D). Returns (T, D), aux_loss."""
+    t, d = x.shape
+    e = experts_gate.shape[0]
+    x = shard(x, ("act_tokens", None))
+    if rows > 1 and t % rows == 0:
+        # §Perf: per-data-shard-row grouping — dispatch stays shard-local
+        tl = t // rows
+        cap = moe_capacity(tl, e, top_k, capacity_factor)
+        xr = shard(x.reshape(rows, tl, d), ("act_rows", None, None))
+        fn = functools.partial(_routed_ffn, router_w=router_w,
+                               experts_gate=experts_gate,
+                               experts_up=experts_up,
+                               experts_down=experts_down,
+                               top_k=top_k, cap=cap)
+        y, aux = jax.vmap(fn)(xr)
+        y = shard(y, ("act_rows", None, None)).reshape(t, d)
+        aux = aux.mean()
+    else:
+        cap = moe_capacity(t, e, top_k, capacity_factor)
+        y, aux = _routed_ffn(x, router_w, experts_gate, experts_up,
+                             experts_down, top_k, cap)
+    y = shard(y, ("act_tokens", None))
+    if shared_gate is not None:
+        hs = jax.nn.silu(x @ shared_gate) * (x @ shared_up)
+        y = y + hs @ shared_down
+    return y.astype(x.dtype), aux

@@ -1,0 +1,74 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+a_t = exp(-c * softplus(Lambda) * sigmoid(r_t))          (c = 8)
+
+Train/prefill uses an associative scan over time (log-depth); decode is the
+O(1) recurrence.  The temporal conv1d (width 4) preceding the gate matches
+the Griffin recurrent block.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rglru_scan", "rglru_step", "causal_conv1d", "conv1d_step"]
+
+_C = 8.0
+
+
+def _gates(x, w_input, w_rec, lam):
+    i_t = jax.nn.sigmoid(x @ w_input)
+    r_t = jax.nn.sigmoid(x @ w_rec)
+    log_a = -_C * jax.nn.softplus(lam)[None, None, :] * r_t
+    return i_t, log_a
+
+
+def rglru_scan(x, w_input, w_rec, lam, h0=None):
+    """x: (b, s, d). Returns (y (b,s,d), h_final (b,d))."""
+    b, s, d = x.shape
+    i_t, log_a = _gates(x.astype(jnp.float32), w_input.astype(jnp.float32),
+                        w_rec.astype(jnp.float32), lam)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i_t * x.astype(jnp.float32))
+
+    def comb(left, right):
+        hL, aL = left
+        hR, aR = right
+        return hR + hL * aR, aL * aR
+
+    h0v = jnp.zeros((b, 1, d), jnp.float32) if h0 is None \
+        else h0.astype(jnp.float32)[:, None, :]
+    # prepend h0 as a virtual step with a=1 handled by seeding the first input
+    gated = gated.at[:, 0, :].add(h0v[:, 0, :] * a[:, 0, :])
+    h, _ = jax.lax.associative_scan(comb, (gated, a), axis=1)
+    return h.astype(x.dtype), h[:, -1, :]
+
+
+def rglru_step(h, x_t, w_input, w_rec, lam):
+    """One decode step.  h: (b, d); x_t: (b, d)."""
+    i_t = jax.nn.sigmoid(x_t @ w_input)
+    r_t = jax.nn.sigmoid(x_t @ w_rec)
+    log_a = -_C * jax.nn.softplus(lam)[None, :] * r_t
+    a = jnp.exp(log_a.astype(jnp.float32))
+    h = a * h + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) \
+        * (i_t * x_t).astype(jnp.float32)
+    return h.astype(x_t.dtype), h
+
+
+def causal_conv1d(x, w):
+    """Depthwise causal conv.  x: (b, s, d); w: (k, d)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    return out
+
+
+def conv1d_step(tail, x_t, w):
+    """Decode conv step.  tail: (b, k-1, d) previous inputs; x_t: (b, d)."""
+    k = w.shape[0]
+    window = jnp.concatenate([tail, x_t[:, None, :]], 1)     # (b, k, d)
+    y = jnp.einsum("bkd,kd->bd", window, w)
+    return y, window[:, 1:, :]

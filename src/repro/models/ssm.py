@@ -1,0 +1,109 @@
+"""Mamba-2 SSD (state-space duality) layer — chunked quadratic-within /
+linear-across algorithm (Dao & Gu, arXiv:2405.21060 §6).
+
+Train/prefill: O(S * L) with chunk length L (default 256); decode: O(1)
+recurrent state (B, H, P, N).  Pure jnp; numerically validated against the
+naive recurrence in tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssd_chunked", "ssd_decode_step", "ssd_naive"]
+
+
+def _segsum(a):
+    """a: (..., L) -> (..., L, L) lower-triangular cumulative sums:
+    out[i, j] = sum(a[j+1..i]) for j < i; -inf above diagonal."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, -1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_chunked(x, dt, A, B, C, D, *, chunk=256):
+    """SSD forward.
+
+    x: (b, s, h, p)   inputs per head
+    dt: (b, s, h)     softplus-activated step sizes
+    A: (h,)           negative state decay rates (A < 0)
+    B, C: (b, s, g, n) input/output projections (g groups broadcast to h)
+    D: (h,)           skip connection
+    Returns (y (b,s,h,p), final_state (b,h,p,n)).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    L = min(chunk, s)
+    nc = s // L
+    rep = h // g
+    a = (dt * A[None, None, :]).astype(jnp.float32)          # (b,s,h) log-decay
+    xb = (x * dt[..., None]).astype(jnp.float32)             # dt-scaled input
+    Bc = jnp.repeat(B, rep, axis=2).astype(jnp.float32)      # (b,s,h,n)
+    Cc = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    # chunked views: (b, nc, L, ...)
+    ar = a.reshape(b, nc, L, h)
+    xr = xb.reshape(b, nc, L, h, p)
+    Br = Bc.reshape(b, nc, L, h, n)
+    Cr = Cc.reshape(b, nc, L, h, n)
+    # 1. intra-chunk (quadratic): y_diag = (C B^T  *  decay) x
+    Ldec = jnp.exp(_segsum(ar.transpose(0, 1, 3, 2)))        # (b,nc,h,L,L)
+    scores = jnp.einsum("bclhn,bcshn->bchls", Cr, Br)        # (b,nc,h,L,L)
+    y_diag = jnp.einsum("bchls,bchls,bcshp->bclhp", scores, Ldec,
+                        xr)
+    # 2. chunk-final states: decay-weighted input summary per chunk
+    a_cum = jnp.cumsum(ar, axis=2)                           # (b,nc,L,h)
+    a_tail = a_cum[:, :, -1:, :] - a_cum                     # decay to chunk end
+    states = jnp.einsum("bclhn,bclh,bclhp->bchpn", Br, jnp.exp(a_tail), xr)
+    # 3. inter-chunk recurrence over nc (associative scan over chunks)
+    a_tot = a_cum[:, :, -1, :]                               # (b,nc,h)
+
+    def comb(left, right):
+        sL, aL = left
+        sR, aR = right
+        return sR + sL * jnp.exp(aR)[..., None, None], aL + aR
+
+    st_in, a_in = jax.lax.associative_scan(
+        comb, (states, a_tot), axis=1)
+    # state entering chunk c = scanned state of chunk c-1 (shift right)
+    st_prev = jnp.concatenate(
+        [jnp.zeros_like(st_in[:, :1]), st_in[:, :-1]], axis=1)  # (b,nc,h,p,n)
+    # 4. inter-chunk contribution: C_t decay(t) state_prev
+    y_off = jnp.einsum("bclhn,bclh,bchpn->bclhp", Cr, jnp.exp(a_cum), st_prev)
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    final = st_in[:, -1]                                     # (b,h,p,n)
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t, D):
+    """One recurrent step.  state: (b,h,p,n); x_t: (b,h,p); dt_t: (b,h);
+    B_t/C_t: (b,g,n).  Returns (y_t (b,h,p), state')."""
+    h = x_t.shape[1]
+    g = B_t.shape[1]
+    rep = h // g
+    Bh = jnp.repeat(B_t, rep, axis=1).astype(jnp.float32)    # (b,h,n)
+    Ch = jnp.repeat(C_t, rep, axis=1).astype(jnp.float32)
+    da = jnp.exp((dt_t * A[None, :]).astype(jnp.float32))    # (b,h)
+    xs = (x_t * dt_t[..., None]).astype(jnp.float32)         # (b,h,p)
+    state = state * da[..., None, None] + xs[..., None] * Bh[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+    y = y + x_t.astype(jnp.float32) * D[None, :, None]
+    return y.astype(x_t.dtype), state
+
+
+def ssd_naive(x, dt, A, B, C, D):
+    """O(S) sequential reference (oracle for tests)."""
+    b, s, h, p = x.shape
+    n = B.shape[3]
+    state = jnp.zeros((b, h, p, n), jnp.float32)
+    ys = []
+    for t in range(s):
+        y, state = ssd_decode_step(state, x[:, t], dt[:, t], A, B[:, t],
+                                   C[:, t], D)
+        ys.append(y)
+    return jnp.stack(ys, 1), state

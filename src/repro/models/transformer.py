@@ -1,0 +1,523 @@
+"""Block definitions + parameter init for every assigned family, with
+scan-over-layers (O(1) HLO in depth) and configurable remat.
+
+Families:
+  dense   — GQA attention (+qkv_bias/+qk_norm variants) + SwiGLU
+  moe     — GQA attention + shared/routed top-k experts
+  ssm     — Mamba-2 (SSD) mixing, no attention
+  hybrid  — RecurrentGemma: (rec, rec, local-attn) triples + MLP each layer
+  encoder — bidirectional dense (hubert backbone)
+  vlm     — dense decoder fed by a vision-stub prefix (phi-3-vision backbone)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import rglru as rg
+from repro.models import ssm as ssd
+from repro.models.attention import decode_attention, gqa_attention
+from repro.models.common import (Param, apply_rope, init_dense, init_embed,
+                                 init_scalar, rms_norm, rope)
+from repro.models.config import ModelConfig
+from repro.dist.ctx import shard
+
+__all__ = ["init_params", "forward", "decode_step", "init_decode_state"]
+
+
+# ===========================================================================
+# Parameter init (all stacked layers carry a leading "layers" axis)
+# ===========================================================================
+
+def _init_attn(cfg: ModelConfig, key, L) -> dict:
+    d, h, k_, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    ks = jax.random.split(key, 8)
+    p = {
+        "ln1": init_scalar((L, d), ("layers", "embed")),
+        "wq": init_dense(ks[0], d, (h, hd), ("layers", "embed", "heads", "head_dim")),
+        "wk": init_dense(ks[1], d, (k_, hd), ("layers", "embed", "kv", "head_dim")),
+        "wv": init_dense(ks[2], d, (k_, hd), ("layers", "embed", "kv", "head_dim")),
+        "wo": init_dense(ks[3], h * hd, (d,), ("layers", "heads", "embed")),
+    }
+    # stack leading layer axis onto dense inits
+    for i, name in enumerate(("wq", "wk", "wv", "wo")):
+        w = p[name]
+        stacked = jax.random.truncated_normal(
+            jax.random.fold_in(ks[4], i), -2.0, 2.0,
+            (L,) + w.value.shape, jnp.float32) * (1.0 / (d ** 0.5))
+        p[name] = Param(stacked.astype(jnp.bfloat16), w.axes)
+    if cfg.qkv_bias:
+        p["bq"] = init_scalar((L, h, hd), ("layers", "heads", "head_dim"), 0.0)
+        p["bk"] = init_scalar((L, k_, hd), ("layers", "kv", "head_dim"), 0.0)
+        p["bv"] = init_scalar((L, k_, hd), ("layers", "kv", "head_dim"), 0.0)
+    if cfg.qk_norm:
+        p["qnorm"] = init_scalar((L, hd), ("layers", "head_dim"))
+        p["knorm"] = init_scalar((L, hd), ("layers", "head_dim"))
+    return p
+
+
+def _init_mlp(cfg: ModelConfig, key, L) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+
+    def mk(k, shape, axes, fan_in):
+        w = jax.random.truncated_normal(k, -2.0, 2.0, (L,) + shape,
+                                        jnp.float32) / (fan_in ** 0.5)
+        return Param(w.astype(jnp.bfloat16), axes)
+
+    return {
+        "ln2": init_scalar((L, d), ("layers", "embed")),
+        "wi_gate": mk(ks[0], (d, f), ("layers", "embed", "mlp"), d),
+        "wi_up": mk(ks[1], (d, f), ("layers", "embed", "mlp"), d),
+        "wo_mlp": mk(ks[2], (f, d), ("layers", "mlp", "embed"), f),
+    }
+
+
+def _init_moe(cfg: ModelConfig, key, L) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 7)
+
+    def mk(k, shape, axes, fan_in):
+        w = jax.random.truncated_normal(k, -2.0, 2.0, (L,) + shape,
+                                        jnp.float32) / (fan_in ** 0.5)
+        return Param(w.astype(jnp.bfloat16), axes)
+
+    p = {
+        "ln2": init_scalar((L, d), ("layers", "embed")),
+        "router": mk(ks[0], (d, e), ("layers", "embed", "experts"), d),
+        "eg": mk(ks[1], (e, d, f), ("layers", "experts", "embed", "mlp"), d),
+        "eu": mk(ks[2], (e, d, f), ("layers", "experts", "embed", "mlp"), d),
+        "ed": mk(ks[3], (e, f, d), ("layers", "experts", "mlp", "embed"), f),
+    }
+    if cfg.n_shared:
+        fs = f * cfg.n_shared
+        p["sg"] = mk(ks[4], (d, fs), ("layers", "embed", "mlp"), d)
+        p["su"] = mk(ks[5], (d, fs), ("layers", "embed", "mlp"), d)
+        p["sd"] = mk(ks[6], (fs, d), ("layers", "mlp", "embed"), fs)
+    return p
+
+
+def _init_ssm(cfg: ModelConfig, key, L) -> dict:
+    d = cfg.d_model
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    d_in = 2 * di + 2 * g * n + h           # z, x, B, C, dt
+    conv_dim = di + 2 * g * n
+    ks = jax.random.split(key, 4)
+
+    def mk(k, shape, axes, fan_in):
+        w = jax.random.truncated_normal(k, -2.0, 2.0, (L,) + shape,
+                                        jnp.float32) / (fan_in ** 0.5)
+        return Param(w.astype(jnp.bfloat16), axes)
+
+    a_init = jnp.log(jnp.broadcast_to(
+        jnp.linspace(1.0, 16.0, h, dtype=jnp.float32), (L, h)))
+    return {
+        "ln1": init_scalar((L, d), ("layers", "embed")),
+        "in_proj": mk(ks[0], (d, d_in), ("layers", "embed", "mlp"), d),
+        "conv_w": mk(ks[1], (cfg.conv_width, conv_dim),
+                     ("layers", "conv", "mlp"), cfg.conv_width),
+        "A_log": Param(a_init, ("layers", "heads")),
+        "Dskip": init_scalar((L, h), ("layers", "heads")),
+        "dt_bias": init_scalar((L, h), ("layers", "heads"), 0.0),
+        "ssm_norm": init_scalar((L, di), ("layers", "mlp")),
+        "out_proj": mk(ks[2], (di, d), ("layers", "mlp", "embed"), di),
+    }
+
+
+def _init_rec(cfg: ModelConfig, key, L) -> dict:
+    d, r = cfg.d_model, cfg.rnn_width
+    ks = jax.random.split(key, 6)
+
+    def mk(k, shape, axes, fan_in):
+        w = jax.random.truncated_normal(k, -2.0, 2.0, (L,) + shape,
+                                        jnp.float32) / (fan_in ** 0.5)
+        return Param(w.astype(jnp.bfloat16), axes)
+
+    lam = jnp.broadcast_to(jnp.linspace(0.9, 4.0, r, dtype=jnp.float32), (L, r))
+    return {
+        "ln1": init_scalar((L, d), ("layers", "embed")),
+        "wx": mk(ks[0], (d, r), ("layers", "embed", "mlp"), d),
+        "wgate": mk(ks[1], (d, r), ("layers", "embed", "mlp"), d),
+        "conv": mk(ks[2], (cfg.conv_width, r), ("layers", "conv", "mlp"),
+                   cfg.conv_width),
+        "w_input": mk(ks[3], (r, r), ("layers", "mlp", "heads"), r),
+        "w_rec": mk(ks[4], (r, r), ("layers", "mlp", "heads"), r),
+        "lam": Param(lam, ("layers", "mlp")),
+        "wy": mk(ks[5], (r, d), ("layers", "mlp", "embed"), r),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> dict[str, Any]:
+    ks = jax.random.split(key, 10)
+    params: dict[str, Any] = {
+        "embed": init_embed(ks[0], cfg.vocab, cfg.d_model),
+        "final_norm": init_scalar((cfg.d_model,), ("embed",)),
+    }
+    if not cfg.tie_embed:
+        params["lm_head"] = init_dense(
+            ks[1], cfg.d_model, (cfg.vocab,), ("embed", "vocab"))
+    if cfg.frontend:
+        params["front_proj"] = init_dense(
+            ks[2], cfg.frontend_dim, (cfg.d_model,), ("front", "embed"))
+    L = cfg.n_layers
+    if cfg.family in ("dense", "encoder", "vlm"):
+        params["blocks"] = {**_init_attn(cfg, ks[3], L),
+                            **_init_mlp(cfg, ks[4], L)}
+    elif cfg.family == "moe":
+        params["blocks"] = {**_init_attn(cfg, ks[3], L),
+                            **_init_moe(cfg, ks[4], L)}
+    elif cfg.family == "ssm":
+        params["blocks"] = _init_ssm(cfg, ks[3], L)
+    elif cfg.family == "hybrid":
+        nt, rem = divmod(L, 3)
+        params["blocks"] = {
+            "rec1": {**_init_rec(cfg, ks[3], nt), **_init_mlp(cfg, ks[4], nt)},
+            "rec2": {**_init_rec(cfg, ks[5], nt), **_init_mlp(cfg, ks[6], nt)},
+            "attn": {**_init_attn(cfg, ks[7], nt), **_init_mlp(cfg, ks[8], nt)},
+        }
+        if rem:
+            params["tail"] = {**_init_rec(cfg, ks[9], rem),
+                              **_init_mlp(cfg, jax.random.fold_in(ks[9], 1), rem)}
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+# ===========================================================================
+# Forward blocks (operate on unboxed arrays)
+# ===========================================================================
+
+def _attn_fwd(cfg: ModelConfig, x, blk, sin, cos, *, window=0):
+    h, k_, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    x = shard(x, ("act_batch", None, None))
+    xn = rms_norm(x, blk["ln1"])
+    q = shard(jnp.einsum("bsd,dhe->bshe", xn, blk["wq"]),
+              ("act_batch", None, "act_heads", None))
+    k = shard(jnp.einsum("bsd,dke->bske", xn, blk["wk"]),
+              ("act_batch", None, "act_kv", None))
+    v = shard(jnp.einsum("bsd,dke->bske", xn, blk["wv"]),
+              ("act_batch", None, "act_kv", None))
+    if cfg.qkv_bias:
+        q = q + blk["bq"]
+        k = k + blk["bk"]
+        v = v + blk["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, blk["qnorm"])
+        k = rms_norm(k, blk["knorm"])
+    q = apply_rope(q, sin, cos).astype(x.dtype)
+    k = apply_rope(k, sin, cos).astype(x.dtype)
+    v = v.astype(x.dtype)
+    att = gqa_attention(q, k, v, causal=cfg.causal, window=window,
+                        chunk=cfg.attn_chunk)
+    out = jnp.einsum("bshe,hed->bsd", att,
+                     blk["wo"].reshape(h, hd, cfg.d_model))
+    return x + out, (k, v)
+
+
+def _mlp_fwd(cfg, x, blk):
+    xn = rms_norm(x, blk["ln2"])
+    hgate = jax.nn.silu(xn @ blk["wi_gate"]) * (xn @ blk["wi_up"])
+    hgate = shard(hgate, ("act_batch", None, "act_mlp"))
+    return x + hgate @ blk["wo_mlp"]
+
+
+def _moe_fwd(cfg: ModelConfig, x, blk):
+    from repro.dist.ctx import current_mesh
+    from repro.models.moe import moe_ffn
+    b, s, d = x.shape
+    mesh = current_mesh()
+    rows = 1
+    if mesh is not None and cfg.moe_local_dispatch:
+        rows = mesh.shape.get("pod", 1) * mesh.shape.get("data", 1)
+    xn = rms_norm(x, blk["ln2"]).reshape(b * s, d)
+    y, aux = moe_ffn(
+        xn, blk["router"], blk["eg"], blk["eu"], blk["ed"],
+        blk.get("sg"), blk.get("su"), blk.get("sd"),
+        top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+        rows=rows if (b * s) % rows == 0 else 1)
+    return x + y.reshape(b, s, d), aux
+
+
+def _ssm_fwd(cfg: ModelConfig, x, blk):
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    p = cfg.ssm_headdim
+    b, s, d = x.shape
+    x = shard(x, ("act_batch", None, None))
+    xn = rms_norm(x, blk["ln1"])
+    zxbcdt = shard(xn @ blk["in_proj"], ("act_batch", None, "act_mlp"))
+    z, xin, B, C, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + g * n, 2 * di + 2 * g * n], axis=-1)
+    conv_in = jnp.concatenate([xin, B, C], -1)
+    conv_out = jax.nn.silu(rg.causal_conv1d(conv_in, blk["conv_w"]))
+    xin, B, C = jnp.split(conv_out, [di, di + g * n], axis=-1)
+    dt_a = jax.nn.softplus(dt.astype(jnp.float32) + blk["dt_bias"])
+    y, _ = ssd.ssd_chunked(
+        xin.reshape(b, s, h, p), dt_a, -jnp.exp(blk["A_log"]),
+        B.reshape(b, s, g, n), C.reshape(b, s, g, n), blk["Dskip"],
+        chunk=cfg.ssm_chunk)
+    y = y.reshape(b, s, di)
+    y = rms_norm(y * jax.nn.silu(z), blk["ssm_norm"])
+    return x + y @ blk["out_proj"]
+
+
+def _rec_fwd(cfg: ModelConfig, x, blk):
+    x = shard(x, ("act_batch", None, None))
+    xn = rms_norm(x, blk["ln1"])
+    gate = jax.nn.gelu(xn @ blk["wgate"])
+    u = rg.causal_conv1d(xn @ blk["wx"], blk["conv"])
+    y, _ = rg.rglru_scan(u, blk["w_input"], blk["w_rec"], blk["lam"])
+    x = x + (gate * y) @ blk["wy"]
+    return _mlp_fwd(cfg, x, blk)
+
+
+# ===========================================================================
+# Full forward (training / prefill)
+# ===========================================================================
+
+def _scan(fn, x, blocks, cfg, extra=0.0):
+    if cfg.remat == "block":
+        fn = jax.checkpoint(fn)
+
+    def body(carry, blk):
+        x, aux = carry
+        x, a = fn(x, blk)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), blocks)
+    return x, aux
+
+
+def forward(cfg: ModelConfig, params, tokens, frontend_feats=None,
+            positions=None, return_cache=False):
+    """Training / prefill forward.
+
+    tokens: (B, S_text) int32; frontend_feats: (B, S_front, F) for
+    audio/vision stubs (prepended).  Returns (logits, aux_loss, caches) —
+    caches is a per-layer (k, v) stack for attention families when
+    ``return_cache`` (prefill), else None.
+    """
+    emb = params["embed"]
+    x = shard(emb[tokens], ("act_batch", None, None))
+    if cfg.frontend:
+        front = frontend_feats @ params["front_proj"]
+        x = front.astype(x.dtype) if cfg.family == "encoder" \
+            else jnp.concatenate([front.astype(x.dtype), x], 1)
+    b, s, d = x.shape
+    pos = jnp.arange(s) if positions is None else positions
+    sin, cos = rope(pos, cfg.hd, cfg.rope_theta)
+
+    caches = None
+    if cfg.family in ("dense", "encoder", "vlm", "moe"):
+        def blk_fn(xx, blk):
+            xx, kv = _attn_fwd(cfg, xx, blk, sin, cos)
+            if cfg.family == "moe":
+                xx, aux = _moe_fwd(cfg, xx, blk)
+            else:
+                xx = _mlp_fwd(cfg, xx, blk)
+                aux = jnp.zeros((), jnp.float32)
+            if return_cache:
+                return xx, (aux, kv)
+            return xx, (aux, None)
+
+        if cfg.remat == "block":
+            blk_fn = jax.checkpoint(blk_fn)
+
+        def body(carry, blk):
+            xx, aux = carry
+            xx, (a, kv) = blk_fn(xx, blk)
+            return (xx, aux + a), kv
+
+        (x, aux), caches = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), params["blocks"])
+    elif cfg.family == "ssm":
+        x, aux = _scan(lambda xx, blk: (_ssm_fwd(cfg, xx, blk),
+                                        jnp.zeros((), jnp.float32)),
+                       x, params["blocks"], cfg)
+    elif cfg.family == "hybrid":
+        def triple(xx, blks):
+            b1, b2, b3 = blks
+            xx = _rec_fwd(cfg, xx, b1)
+            xx = _rec_fwd(cfg, xx, b2)
+            xx, kv = _attn_fwd(cfg, xx, b3, sin, cos, window=cfg.window)
+            xx = _mlp_fwd(cfg, xx, b3)
+            return xx, (jnp.zeros((), jnp.float32), kv if return_cache else None)
+
+        if cfg.remat == "block":
+            triple = jax.checkpoint(triple)
+
+        def body(carry, blks):
+            xx, aux = carry
+            xx, (a, kv) = triple(xx, blks)
+            return (xx, aux + a), kv
+
+        (x, aux), caches = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)),
+            (params["blocks"]["rec1"], params["blocks"]["rec2"],
+             params["blocks"]["attn"]))
+        if "tail" in params:
+            def tail_body(carry, blk):
+                return _rec_fwd(cfg, carry, blk), None
+            x, _ = jax.lax.scan(tail_body, x, params["tail"])
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embed else params["lm_head"]
+    logits = shard(x @ head, ("act_batch", None, "act_vocab"))
+    return logits, aux, (caches if return_cache else None)
+
+
+# ===========================================================================
+# Decode (single-token, stateful)
+# ===========================================================================
+
+def init_decode_state(cfg: ModelConfig, batch: int, smax: int):
+    """Zero-filled decode state; shapes double as the dry-run specs."""
+    L = cfg.n_layers
+    hd, k_ = cfg.hd, cfg.n_kv
+    bf = jnp.bfloat16
+    if cfg.family in ("dense", "vlm", "moe"):
+        return {"k": jnp.zeros((L, batch, smax, k_, hd), bf),
+                "v": jnp.zeros((L, batch, smax, k_, hd), bf)}
+    if cfg.family == "ssm":
+        h, p, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+        cd = cfg.d_inner + 2 * cfg.ssm_groups * n
+        return {"ssm": jnp.zeros((L, batch, h, p, n), jnp.float32),
+                "conv": jnp.zeros((L, batch, cfg.conv_width - 1, cd), bf)}
+    if cfg.family == "hybrid":
+        nt, rem = divmod(L, 3)
+        w = min(cfg.window, smax)
+        r = cfg.rnn_width
+        st = {"h1": jnp.zeros((nt, batch, r), jnp.float32),
+              "h2": jnp.zeros((nt, batch, r), jnp.float32),
+              "c1": jnp.zeros((nt, batch, cfg.conv_width - 1, r), bf),
+              "c2": jnp.zeros((nt, batch, cfg.conv_width - 1, r), bf),
+              "k": jnp.zeros((nt, batch, w, k_, hd), bf),
+              "v": jnp.zeros((nt, batch, w, k_, hd), bf)}
+        if rem:
+            st["ht"] = jnp.zeros((rem, batch, r), jnp.float32)
+            st["ct"] = jnp.zeros((rem, batch, cfg.conv_width - 1, r), bf)
+        return st
+    raise ValueError(f"{cfg.family} has no decode state")
+
+
+def _attn_decode(cfg, x, blk, state_k, state_v, pos, sin, cos, window=0):
+    h, k_, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    xn = rms_norm(x, blk["ln1"])
+    q = jnp.einsum("bsd,dhe->bshe", xn, blk["wq"])
+    k = jnp.einsum("bsd,dke->bske", xn, blk["wk"])
+    v = jnp.einsum("bsd,dke->bske", xn, blk["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + blk["bq"], k + blk["bk"], v + blk["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, blk["qnorm"])
+        k = rms_norm(k, blk["knorm"])
+    q = apply_rope(q, sin, cos).astype(x.dtype)
+    k = apply_rope(k, sin, cos).astype(x.dtype)
+    v = v.astype(x.dtype)
+    smax = state_k.shape[1]
+    slot = pos % smax if window else jnp.minimum(pos, smax - 1)
+    state_k = jax.lax.dynamic_update_slice(
+        state_k, k, (0, slot, 0, 0))
+    state_v = jax.lax.dynamic_update_slice(
+        state_v, v, (0, slot, 0, 0))
+    length = jnp.minimum(pos + 1, smax) if window else pos + 1
+    att = decode_attention(q, state_k, state_v, length)
+    out = jnp.einsum("bshe,hed->bsd", att,
+                     blk["wo"].reshape(h, hd, cfg.d_model))
+    return x + out, state_k, state_v
+
+
+def _ssm_decode(cfg, x, blk, st_ssm, st_conv):
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    p = cfg.ssm_headdim
+    b = x.shape[0]
+    xn = rms_norm(x[:, 0, :], blk["ln1"])
+    zxbcdt = xn @ blk["in_proj"]
+    z, xin, B, C, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + g * n, 2 * di + 2 * g * n], axis=-1)
+    conv_in = jnp.concatenate([xin, B, C], -1)
+    cy, st_conv = rg.conv1d_step(st_conv, conv_in, blk["conv_w"])
+    cy = jax.nn.silu(cy)
+    xin, B, C = jnp.split(cy, [di, di + g * n], axis=-1)
+    dt_a = jax.nn.softplus(dt.astype(jnp.float32) + blk["dt_bias"])
+    y, st_ssm = ssd.ssd_decode_step(
+        st_ssm, xin.reshape(b, h, p), dt_a, -jnp.exp(blk["A_log"]),
+        B.reshape(b, g, n), C.reshape(b, g, n), blk["Dskip"])
+    y = y.reshape(b, di)
+    y = rms_norm(y * jax.nn.silu(z), blk["ssm_norm"])
+    return x + (y @ blk["out_proj"])[:, None, :], st_ssm, st_conv
+
+
+def _rec_decode(cfg, x, blk, h_st, c_st):
+    xn = rms_norm(x[:, 0, :], blk["ln1"])
+    gate = jax.nn.gelu(xn @ blk["wgate"])
+    u, c_st = rg.conv1d_step(c_st, xn @ blk["wx"], blk["conv"])
+    y, h_st = rg.rglru_step(h_st, u, blk["w_input"], blk["w_rec"], blk["lam"])
+    x = x + ((gate * y.astype(gate.dtype)) @ blk["wy"])[:, None, :]
+    xn2 = rms_norm(x, blk["ln2"])
+    hg = jax.nn.silu(xn2 @ blk["wi_gate"]) * (xn2 @ blk["wi_up"])
+    return x + hg @ blk["wo_mlp"], h_st, c_st
+
+
+def decode_step(cfg: ModelConfig, params, state, token, pos):
+    """One decode step.  token: (B, 1) int32; pos: () int32 — current length.
+    Returns (logits (B, 1, V), state')."""
+    x = params["embed"][token]
+    sin, cos = rope(pos[None] if pos.ndim == 0 else pos, cfg.hd, cfg.rope_theta)
+    if cfg.family in ("dense", "vlm", "moe"):
+        def body(xx, inputs):
+            blk, kc, vc = inputs
+            xx, kc, vc = _attn_decode(cfg, xx, blk, kc, vc, pos, sin, cos)
+            if cfg.family == "moe":
+                xx, _ = _moe_fwd(cfg, xx, blk)
+            else:
+                xx = _mlp_fwd(cfg, xx, blk)
+            return xx, (kc, vc)
+
+        x, (k2, v2) = jax.lax.scan(body, x,
+                                   (params["blocks"], state["k"], state["v"]))
+        state = {"k": k2, "v": v2}
+    elif cfg.family == "ssm":
+        def body(xx, inputs):
+            blk, st, cv = inputs
+            xx, st, cv = _ssm_decode(cfg, xx, blk, st, cv)
+            return xx, (st, cv)
+
+        x, (s2, c2) = jax.lax.scan(body, x, (params["blocks"], state["ssm"],
+                                             state["conv"]))
+        state = {"ssm": s2, "conv": c2}
+    elif cfg.family == "hybrid":
+        def body(xx, inputs):
+            blks, h1, h2, c1, c2, kc, vc = inputs
+            b1, b2, b3 = blks
+            xx, h1, c1 = _rec_decode(cfg, xx, b1, h1, c1)
+            xx, h2, c2 = _rec_decode(cfg, xx, b2, h2, c2)
+            xx, kc, vc = _attn_decode(cfg, xx, b3, kc, vc, pos, sin, cos,
+                                      window=cfg.window)
+            xx = _mlp_fwd(cfg, xx, b3)
+            return xx, (h1, h2, c1, c2, kc, vc)
+
+        blks = (params["blocks"]["rec1"], params["blocks"]["rec2"],
+                params["blocks"]["attn"])
+        x, (h1, h2, c1, c2, k2, v2) = jax.lax.scan(
+            body, x, (blks, state["h1"], state["h2"], state["c1"],
+                      state["c2"], state["k"], state["v"]))
+        state = dict(state, h1=h1, h2=h2, c1=c1, c2=c2, k=k2, v=v2)
+        if "tail" in params:
+            def tail_body(xx, inputs):
+                blk, ht, ct = inputs
+                xx, ht, ct = _rec_decode(cfg, xx, blk, ht, ct)
+                return xx, (ht, ct)
+            x, (ht, ct) = jax.lax.scan(tail_body, x,
+                                       (params["tail"], state["ht"],
+                                        state["ct"]))
+            state = dict(state, ht=ht, ct=ct)
+    else:
+        raise ValueError(cfg.family)
+    x = rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embed else params["lm_head"]
+    return shard(x @ head, ("act_batch", None, "act_vocab")), state

@@ -1,0 +1,66 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline table.
+
+    PYTHONPATH=src python -m repro.rooflines.report results/dryrun
+"""
+from __future__ import annotations
+
+import glob
+import json
+import sys
+
+
+def load(outdir: str):
+    recs = []
+    for path in sorted(glob.glob(f"{outdir}/*.json")):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(recs, mesh="16x16") -> str:
+    rows = ["| arch | cell | status | compute s | memory s | coll s | "
+            "bottleneck | MODEL_FLOPs | useful | roofline frac | "
+            "bytes/chip (args+temp) |",
+            "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['cell']} | {r['status']}: "
+                        f"{r.get('reason', r.get('error', ''))[:60]} "
+                        f"| | | | | | | | |")
+            continue
+        t = r["roofline"]
+        mem = r.get("bytes_per_chip", {})
+        gb = (mem.get("argument_size_in_bytes", 0)
+              + mem.get("temp_size_in_bytes", 0)) / 1e9
+        rows.append(
+            f"| {r['arch']} | {r['cell']} | ok | {t['compute_s']:.3g} | "
+            f"{t['memory_s']:.3g} | {t['collective_s']:.3g} | "
+            f"{t['bottleneck']} | {t['model_flops']:.3g} | "
+            f"{t['useful_ratio']:.3f} | {t['roofline_fraction']:.4f} | "
+            f"{gb:.1f} GB |")
+    return "\n".join(rows)
+
+
+def main():
+    outdir = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    recs = load(outdir)
+    ok = [r for r in recs if r["status"] == "ok" and r["mesh"] == "16x16"]
+    print("### Single-pod (16x16 = 256 chips)\n")
+    print(table(recs, "16x16"))
+    print("\n### Multi-pod (2x16x16 = 512 chips)\n")
+    print(table(recs, "2x16x16"))
+    # hillclimb candidates
+    worst = min(ok, key=lambda r: r["roofline"]["roofline_fraction"])
+    coll = max(ok, key=lambda r: r["roofline"]["collective_s"]
+               / max(r["roofline"]["step_time_s"], 1e-12))
+    print("\nworst roofline fraction:", worst["arch"], worst["cell"],
+          worst["roofline"]["roofline_fraction"])
+    print("most collective-bound:", coll["arch"], coll["cell"],
+          round(coll["roofline"]["collective_s"]
+                / coll["roofline"]["step_time_s"], 3))
+
+
+if __name__ == "__main__":
+    main()

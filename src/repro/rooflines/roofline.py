@@ -1,0 +1,76 @@
+"""Three-term roofline model for TPU v5e (target hardware).
+
+All HLO-derived quantities are PER-CHIP (the post-SPMD module is the
+per-chip program), so:
+
+    compute term    = chip_dot_flops / 197e12        [s]
+    memory term     = chip_hbm_bytes / 819e9         [s]
+    collective term = chip_wire_bytes / 50e9         [s]
+
+The dominant term is the bottleneck; roofline fraction of a cell =
+useful_model_flops / (chips * peak * dominant_term).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["V5E", "RooflineTerms", "roofline", "model_flops"]
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s / chip
+ICI_BW = 50e9             # bytes/s / link (per-chip aggregate modeled as 1 link)
+V5E = dict(peak_flops=PEAK_FLOPS, hbm_bw=HBM_BW, ici_bw=ICI_BW)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    chip_flops: float
+    chip_hbm_bytes: float
+    chip_wire_bytes: float
+    model_flops: float            # 6*N_act*D (train) / 2*N_act*D (inference)
+    useful_ratio: float           # model_flops / (chips * chip_flops)
+    roofline_fraction: float      # model_flops / (chips*peak*dominant)
+    step_time_s: float            # max of the three terms (no-overlap bound)
+
+    def row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def roofline(chip_flops: float, chip_hbm_bytes: float, chip_wire_bytes: float,
+             model_flops: float, chips: int) -> RooflineTerms:
+    ct = chip_flops / PEAK_FLOPS
+    mt = chip_hbm_bytes / HBM_BW
+    lt = chip_wire_bytes / ICI_BW
+    terms = {"compute": ct, "memory": mt, "collective": lt}
+    bott = max(terms, key=terms.get)
+    step = max(ct, mt, lt)
+    return RooflineTerms(
+        compute_s=ct, memory_s=mt, collective_s=lt, bottleneck=bott,
+        chip_flops=chip_flops, chip_hbm_bytes=chip_hbm_bytes,
+        chip_wire_bytes=chip_wire_bytes, model_flops=model_flops,
+        useful_ratio=model_flops / max(chips * chip_flops, 1.0),
+        roofline_fraction=model_flops / max(chips * PEAK_FLOPS * step, 1e-30),
+        step_time_s=step)
+
+
+def model_flops(cfg, kind: str, seq: int, global_batch: int,
+                n_params: int) -> float:
+    """6*N*D for training, 2*N*D for inference (N = active params)."""
+    n_act = n_params
+    if cfg.family == "moe":
+        d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+        expert_p = cfg.n_layers * e * 3 * d * f
+        n_act = n_params - expert_p + cfg.n_layers * (cfg.top_k * 3 * d * f)
+    if kind == "train":
+        tokens = seq * global_batch
+        return 6.0 * n_act * tokens
+    if kind == "prefill":
+        tokens = seq * global_batch
+        return 2.0 * n_act * tokens
+    # decode: one token per sequence; SSM/hybrid read O(1) state, attention
+    # reads the KV cache (memory-bound) — FLOPs side stays 2*N_act per token
+    return 2.0 * n_act * global_batch

@@ -1,0 +1,77 @@
+"""The serving-side CIDER integration: a prefix-cache page table managed by
+the CIDER store engine (DESIGN.md §2.1).
+
+Page-table entries ARE data pointers: key = hash of a prefix block of
+tokens; value = page id in the paged KV pool.  Concurrent requests from many
+serving workers do SEARCH (prefix hit), INSERT (publish a prefilled page)
+and DELETE (eviction) against a shared table with extreme skew (everyone
+shares the system-prompt prefix) — exactly the workload of §2.2, so the
+table runs on ``repro.core.engine`` with ``SyncMode.CIDER``: hot prefix
+publishes get write-combined; cold entries stay optimistic.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.types import IOMetrics, OpBatch, OpKind, SyncMode
+from repro.stores.pointer_array import PointerArray
+
+__all__ = ["PageTable"]
+
+
+def _prefix_hash(tokens: np.ndarray) -> int:
+    h = 1469598103934665603
+    for t in tokens.tolist():
+        h = ((h ^ (t + 1)) * 1099511628211) & 0x7FFFFFFF
+    return h
+
+
+@dataclasses.dataclass
+class PageTable:
+    store: PointerArray
+    block_tokens: int               # tokens per prefix block (== page size)
+
+    @staticmethod
+    def create(n_slots: int = 1 << 16, block_tokens: int = 16,
+               mode: SyncMode = SyncMode.CIDER) -> "PageTable":
+        return PageTable(store=PointerArray.create(n_slots, mode=mode),
+                         block_tokens=block_tokens)
+
+    def block_keys(self, tokens: np.ndarray) -> np.ndarray:
+        """Rolling prefix-block keys for a token sequence."""
+        n = len(tokens) // self.block_tokens
+        return np.asarray([_prefix_hash(tokens[:(i + 1) * self.block_tokens])
+                           % self.store.cfg.n_slots for i in range(n)],
+                          np.int32)
+
+    def lookup(self, keys) -> tuple[np.ndarray, np.ndarray, IOMetrics]:
+        """Batch SEARCH: returns (page_ids, hit_mask, io)."""
+        keys = np.asarray(keys, np.int32)
+        kinds = np.full(keys.shape[0], OpKind.SEARCH, np.int32)
+        batch = OpBatch.make(kinds, keys, np.zeros_like(keys))
+        store, res, io = self.store.apply(batch)
+        self.store = store
+        return np.asarray(res.value), np.asarray(res.ok), io
+
+    def publish(self, keys, pages, n_cns: int = 1
+                ) -> tuple[np.ndarray, IOMetrics]:
+        """Batch INSERT of freshly prefilled pages (combined under CIDER)."""
+        keys = np.asarray(keys, np.int32)
+        kinds = np.full(keys.shape[0], OpKind.INSERT, np.int32)
+        batch = OpBatch.make(kinds, keys, np.asarray(pages, np.int32),
+                             n_cns=n_cns)
+        store, res, io = self.store.apply(batch)
+        self.store = store
+        return np.asarray(res.ok), io
+
+    def evict(self, keys) -> tuple[np.ndarray, IOMetrics]:
+        keys = np.asarray(keys, np.int32)
+        kinds = np.full(keys.shape[0], OpKind.DELETE, np.int32)
+        batch = OpBatch.make(kinds, keys, np.zeros_like(keys))
+        store, res, io = self.store.apply(batch)
+        self.store = store
+        return np.asarray(res.ok), io

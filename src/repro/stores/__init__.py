@@ -1,0 +1,20 @@
+"""Array-backed store / index structures on the (simulated) memory pool.
+
+* ``pointer_array`` — the paper's micro-benchmark object store (§5.2): one
+  data pointer per key, zero index I/O beyond the pointer read.
+* ``race_hash`` — RACE-style two-choice hash index (ATC'21): keys resolve to
+  slots via two candidate buckets read per lookup.
+* ``smart_art`` — SMART-style radix tree (OSDI'23): keys resolve through a
+  fixed-span radix path with client-side path caching.
+
+All indexes resolve keys to *slots* and meter their own index I/O; slot-level
+synchronization (the paper's contribution) is delegated to
+``repro.core.engine`` at the data-pointer level — exactly CIDER's integration
+point ("all memory-disaggregated systems with optimistic out-of-place
+modification", §4.4).
+"""
+from repro.stores.pointer_array import PointerArray
+from repro.stores.race_hash import RaceHash
+from repro.stores.smart_art import SmartART
+
+__all__ = ["PointerArray", "RaceHash", "SmartART"]

@@ -1,0 +1,40 @@
+"""Out-of-place value heap notes.
+
+The engine embeds a bump-allocated heap (``StoreState.heap``) because the
+paper's out-of-place update protocol never reuses a block within a
+synchronization window (writers allocate, then swing the pointer).  Value
+*size* enters the system only through wire bytes (``EngineConfig.value_bytes``
+/ ``SimParams.value_bytes``) — the paper's appendix (Fig 24) shows all
+schemes are IOPS-bound, not bandwidth-bound, which our two-resource NIC model
+(verb tokens + byte tokens) reproduces.
+
+``reclaim`` is provided for long-running loops: compacts live blocks and
+rewrites pointers (host-side, amortized; DM systems do this with epoch-based
+GC off the critical path).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.engine import NULL_PTR, StoreState
+
+__all__ = ["reclaim"]
+
+
+def reclaim(state: StoreState) -> StoreState:
+    """Compact the heap: keep only blocks referenced by live pointers."""
+    live = state.ptr != NULL_PTR
+    n_slots = state.ptr.shape[0]
+    order = jnp.nonzero(live, size=n_slots, fill_value=n_slots)[0]
+    src = jnp.where(order < n_slots, state.ptr[jnp.clip(order, 0, n_slots - 1)], 0)
+    n_live = jnp.sum(live.astype(jnp.int32))
+    heap = jnp.full_like(state.heap, -1)
+    idx = jnp.arange(n_slots)
+    heap = heap.at[jnp.where(idx < n_live, idx, heap.shape[0])].set(
+        state.heap[src], mode="drop")
+    new_ptr = jnp.full_like(state.ptr, NULL_PTR)
+    new_ptr = new_ptr.at[jnp.where(order < n_slots, order, n_slots)].set(
+        idx.astype(jnp.int32), mode="drop")
+    return dataclasses.replace(state, ptr=new_ptr, heap=heap, heap_top=n_live)

@@ -1,0 +1,48 @@
+"""The pointer-array micro-benchmark store (§5.2).
+
+"A minimalistic object storage ... to quantify the pure performance
+advancement brought about by CIDER": key i *is* slot i; each slot holds a
+data pointer to an out-of-place KV pair in the heap.  Index I/O per op is a
+single pointer READ.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine
+from repro.core.credits import CreditState, credit_init
+from repro.core.types import EngineConfig, IOMetrics, OpBatch, SyncMode
+
+__all__ = ["PointerArray"]
+
+
+@dataclasses.dataclass
+class PointerArray:
+    cfg: EngineConfig
+    state: engine.StoreState
+    credits: CreditState
+
+    @staticmethod
+    def create(n_keys: int, mode: SyncMode = SyncMode.CIDER,
+               heap_slots: int | None = None, credit_table: int = 4096,
+               **kw) -> "PointerArray":
+        cfg = EngineConfig(n_slots=n_keys, heap_slots=heap_slots or 4 * n_keys,
+                           mode=mode, index_read_iops=1, index_read_bytes=8,
+                           **kw)
+        return PointerArray(cfg=cfg, state=engine.store_init(cfg),
+                            credits=credit_init(credit_table))
+
+    def populate(self, keys, values) -> "PointerArray":
+        state = engine.populate(self.cfg, self.state, keys, values)
+        return dataclasses.replace(self, state=state)
+
+    def apply(self, batch: OpBatch) -> tuple["PointerArray", engine.Results, IOMetrics]:
+        state, credits, res, io = engine.apply_batch(
+            self.cfg, self.state, self.credits, batch)
+        return dataclasses.replace(self, state=state, credits=credits), res, io
+
+    def view(self):
+        return engine.store_view(self.state)

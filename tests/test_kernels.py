@@ -1,0 +1,92 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret=True vs pure-jnp
+oracle (assert_allclose), plus hypothesis property tests on wc_combine."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import (flash_attention_op,
+                                               flash_attention_ref)
+from repro.kernels.paged_attention.ops import (paged_attention_op,
+                                               paged_attention_ref)
+from repro.kernels.wc_combine.ops import wc_combine_op, wc_combine_ref
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:  # pragma: no cover
+    HAVE_HYP = False
+
+
+@pytest.mark.parametrize("b,h,kh,s,d", [
+    (2, 4, 2, 256, 64), (1, 8, 8, 128, 128), (2, 4, 1, 256, 64),
+    (1, 2, 2, 512, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 64)])
+def test_flash_attention_sweep(b, h, kh, s, d, dtype, causal, window):
+    ks = jax.random.split(jax.random.key(b * 1000 + h * 100 + s), 3)
+    q = jax.random.normal(ks[0], (b, h, s, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, kh, s, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, kh, s, d), jnp.float32).astype(dtype)
+    out = flash_attention_op(q, k, v, causal=causal, window=window,
+                             block_q=64, block_k=64, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("b,h,kh,d,page,np_", [
+    (2, 8, 2, 64, 16, 8), (1, 4, 4, 128, 32, 4), (3, 16, 1, 64, 16, 4),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_sweep(b, h, kh, d, page, np_, dtype):
+    rng = np.random.default_rng(b * 10 + h)
+    npool = b * np_ + 4
+    ks = jax.random.split(jax.random.key(7), 3)
+    q = jax.random.normal(ks[0], (b, h, d), jnp.float32).astype(dtype)
+    kp = jax.random.normal(ks[1], (npool, page, kh, d), jnp.float32).astype(dtype)
+    vp = jax.random.normal(ks[2], (npool, page, kh, d), jnp.float32).astype(dtype)
+    # each sequence gets distinct pages, random lengths
+    bt = rng.permutation(npool)[: b * np_].reshape(b, np_).astype(np.int32)
+    lengths = rng.integers(1, np_ * page + 1, b).astype(np.int32)
+    out = paged_attention_op(q, kp, vp, jnp.asarray(bt), jnp.asarray(lengths),
+                             interpret=True)
+    ref = paged_attention_ref(q, kp, vp, jnp.asarray(bt), jnp.asarray(lengths))
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("n,block", [(256, 64), (1024, 128), (64, 64)])
+def test_wc_combine_sweep(n, block):
+    rng = np.random.default_rng(n)
+    keys = np.sort(rng.integers(0, n // 4, n)).astype(np.int32)
+    f1, l1, r1 = wc_combine_op(jnp.asarray(keys), block=block, interpret=True)
+    f2, l2, r2 = wc_combine_ref(jnp.asarray(keys))
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+
+
+if HAVE_HYP:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.sampled_from([64, 128]),
+           st.sampled_from([1, 3, 17]))
+    def test_wc_combine_property(seed, n, key_space):
+        """Invariants: ranks restart at run heads, one tail per unique key,
+        rank of tail + 1 == run length."""
+        rng = np.random.default_rng(seed)
+        keys = np.sort(rng.integers(0, key_space, n)).astype(np.int32)
+        f, l, r = map(np.asarray, wc_combine_op(jnp.asarray(keys), block=64,
+                                                interpret=True))
+        assert f.sum() == len(np.unique(keys))
+        assert l.sum() == len(np.unique(keys))
+        assert (r[f] == 0).all()
+        for k in np.unique(keys):
+            run = keys == k
+            assert r[run].max() + 1 == run.sum()

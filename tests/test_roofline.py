@@ -1,0 +1,107 @@
+"""HLO parser validation: trip-count multiplication vs XLA's scan-once
+cost_analysis, collective wire formulas, and an end-to-end FLOPs
+cross-check against 6*N*D."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.rooflines.hlo_parser import parse_hlo
+from repro.rooflines.roofline import model_flops, roofline
+
+
+def _compile(fn, *args):
+    lowered = jax.jit(fn).lower(*args)
+    return lowered.compile()
+
+
+def test_scan_trip_count_multiplied():
+    """A 10-step scan of a fixed matmul: parser FLOPs must be ~10x the
+    single-step count (XLA cost_analysis counts the body once)."""
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 128), jnp.float32)
+
+    def one(wv, xv):
+        return xv @ wv
+
+    def scanned(wv, xv):
+        def body(c, _):
+            return c @ wv, None
+        out, _ = jax.lax.scan(body, xv, None, length=10)
+        return out
+
+    f1 = parse_hlo(_compile(one, w, x).as_text()).dot_flops
+    f10 = parse_hlo(_compile(scanned, w, x).as_text()).dot_flops
+    assert f1 > 0
+    assert 8.0 <= f10 / f1 <= 12.0, (f1, f10)
+    # XLA's own analysis counts the body once (the thing we correct for)
+    xla = _compile(scanned, w, x).cost_analysis()
+    if xla and xla.get("flops", 0) > 0:
+        assert xla["flops"] < 0.5 * f10
+
+
+def test_dot_flops_formula():
+    a = jax.ShapeDtypeStruct((64, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 32), jnp.float32)
+    cost = parse_hlo(_compile(lambda x, y: x @ y, a, b).as_text())
+    assert cost.dot_flops == pytest.approx(2 * 64 * 256 * 32, rel=0.01)
+
+
+def test_end_to_end_flops_vs_6nd():
+    """Tiny model train step: parsed global FLOPs within a small factor of
+    6*N*D (remat + attention + f32 CE explain the >1 ratio)."""
+    from repro.configs import get_config
+    from repro.models.common import unbox
+    from repro.models.model import Model
+    from repro.train.optimizer import adamw_init, adamw_update
+
+    cfg = get_config("qwen3-0.6b", smoke=True)
+    model = Model(cfg)
+    params = unbox(model.init(jax.random.key(0)))
+    opt = adamw_init(params)
+    batch = {"tokens": jnp.zeros((2, 32), jnp.int32),
+             "targets": jnp.zeros((2, 32), jnp.int32)}
+
+    def step(p, o, b):
+        (loss, _), g = jax.value_and_grad(model.loss_fn, has_aux=True)(p, b)
+        p, o, _ = adamw_update(p, g, o)
+        return p, o, loss
+
+    cost = parse_hlo(_compile(step, params, opt, batch).as_text())
+    n = model.n_params()
+    mf = model_flops(cfg, "train", 32, 2, n)
+    ratio = cost.dot_flops / mf
+    assert 0.8 < ratio < 8.0, ratio
+
+
+def test_roofline_terms_and_bottleneck():
+    t = roofline(chip_flops=197e12, chip_hbm_bytes=819e9 * 2,
+                 chip_wire_bytes=50e9 * 0.5, model_flops=197e12 * 256,
+                 chips=256)
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(2.0)
+    assert t.collective_s == pytest.approx(0.5)
+    assert t.bottleneck == "memory"
+    assert t.roofline_fraction == pytest.approx(0.5)
+
+
+def test_collective_wire_bytes_allreduce():
+    """psum over 4 shards: AR wire bytes = 2*(g-1)/g * buffer."""
+    if jax.device_count() < 4:
+        pytest.skip("needs >=4 devices (dry-run env only)")
+    mesh = jax.make_mesh((4,), ("x",))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    x = jax.ShapeDtypeStruct((1024, 256), jnp.float32)
+
+    def f(v):
+        return jnp.sum(v * 2.0, axis=0)
+
+    with mesh:
+        lowered = jax.jit(
+            f, in_shardings=NamedSharding(mesh, P("x", None))).lower(x)
+    cost = parse_hlo(lowered.compile().as_text())
+    expect = 2 * (4 - 1) / 4 * 256 * 4  # output row f32
+    assert cost.coll_bytes == pytest.approx(expect, rel=0.5)

@@ -1,0 +1,113 @@
+"""Store/index correctness: RACE hash + SMART ART vs the dict oracle, under
+every sync mode; reservation/overflow behaviour; heap reclaim."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.oracle import OracleStore
+from repro.core.types import OpKind, SyncMode
+from repro.stores import PointerArray, RaceHash, SmartART
+from repro.stores.heap import reclaim
+from repro.core import engine
+from repro.core.types import OpBatch
+
+MODES = [SyncMode.OSYNC, SyncMode.MCS, SyncMode.CIDER]
+
+
+def _ops(rng, b, key_space):
+    kinds = rng.choice([OpKind.SEARCH, OpKind.INSERT, OpKind.UPDATE, OpKind.DELETE],
+                       size=b, p=(0.3, 0.25, 0.3, 0.15)).astype(np.int32)
+    keys = rng.integers(0, key_space, b).astype(np.int32)
+    values = rng.integers(0, 10_000, b).astype(np.int32)
+    return kinds, keys, values
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_race_hash_vs_oracle(mode):
+    rng = np.random.default_rng(0)
+    store = RaceHash.create(1024, mode=mode)
+    oracle = OracleStore()
+    key_space = 5_000  # sparse keys -> exercises insert/absent paths
+    for step in range(4):
+        kinds, keys, values = _ops(rng, 256, key_space)
+        store, res, io, ovf = store.apply(kinds, keys, values, n_cns=8)
+        assert not bool(np.asarray(ovf).any()), "no overflow at low load"
+        ok_o, val_o = oracle.apply(kinds, keys, values)
+        np.testing.assert_array_equal(np.asarray(res.ok), ok_o,
+                                      err_msg=f"step {step}")
+        np.testing.assert_array_equal(np.asarray(res.value), val_o)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_smart_art_vs_oracle(mode):
+    rng = np.random.default_rng(1)
+    store = SmartART.create(key_bits=12, mode=mode)
+    oracle = OracleStore()
+    for step in range(4):
+        kinds, keys, values = _ops(rng, 256, 1 << 12)
+        store, res, io = store.apply(kinds, keys, values, n_cns=8)
+        ok_o, val_o = oracle.apply(kinds, keys, values)
+        np.testing.assert_array_equal(np.asarray(res.ok), ok_o)
+        np.testing.assert_array_equal(np.asarray(res.value), val_o)
+
+
+def test_race_populate_then_search():
+    rng = np.random.default_rng(2)
+    keys = rng.choice(100_000, size=512, replace=False)
+    vals = rng.integers(0, 10_000, 512)
+    store = RaceHash.create(2048).populate(keys, vals, chunk=256)
+    kinds = np.full(512, OpKind.SEARCH, np.int32)
+    store, res, io, _ = store.apply(kinds, keys, vals)
+    assert bool(np.asarray(res.ok).all())
+    np.testing.assert_array_equal(np.asarray(res.value), vals)
+
+
+def test_race_overflow_on_full_bucket():
+    store = RaceHash.create(32, ways=2)  # 16 buckets x 2 ways
+    rng = np.random.default_rng(3)
+    kinds = np.full(512, OpKind.INSERT, np.int32)
+    keys = rng.integers(0, 1 << 28, 512).astype(np.int32)
+    values = np.ones(512, np.int32)
+    store, res, io, ovf = store.apply(kinds, keys, values)
+    assert bool(np.asarray(ovf).any())          # table can't fit 512 keys
+    # every non-overflowed distinct key is findable
+    ok_keys = np.asarray(keys)[np.asarray(res.ok)]
+    if ok_keys.size:
+        s2 = np.full(ok_keys.size, OpKind.SEARCH, np.int32)
+        _, res2, _, _ = store.apply(s2, ok_keys, np.zeros(ok_keys.size, np.int32))
+        assert bool(np.asarray(res2.ok).all())
+
+
+def test_race_index_io_metered():
+    store = RaceHash.create(1024)
+    kinds = np.full(64, OpKind.SEARCH, np.int32)
+    keys = np.arange(64, dtype=np.int32)
+    store, res, io, _ = store.apply(kinds, keys, keys)
+    # 2 bucket reads per op + 1 KV read per found op (none found here)
+    assert int(io.reads) == 64 * 2
+
+
+def test_smart_slot_bijection():
+    store = SmartART.create(key_bits=16)
+    keys = jnp.arange(1 << 16, dtype=jnp.int32)
+    slots = np.asarray(store.slots(keys))
+    assert np.unique(slots).size == 1 << 16
+
+
+def test_heap_reclaim_preserves_view():
+    cfg_store = PointerArray.create(64, mode=SyncMode.CIDER)
+    rng = np.random.default_rng(4)
+    store = cfg_store.populate(np.arange(64), rng.integers(0, 100, 64))
+    for _ in range(6):
+        kinds, keys, values = _ops(rng, 128, 64)
+        batch = OpBatch.make(kinds, keys, values, n_cns=4)
+        store, res, io = store.apply(batch)
+    ex0, v0 = store.view()
+    state2 = reclaim(store.state)
+    ex1, v1 = engine.store_view(state2)
+    np.testing.assert_array_equal(np.asarray(ex0), np.asarray(ex1))
+    np.testing.assert_array_equal(np.asarray(v0), np.asarray(v1))
+    assert int(state2.heap_top) == int(np.asarray(ex0).sum())
