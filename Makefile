@@ -1,0 +1,23 @@
+PYTHONPATH := src
+export PYTHONPATH
+
+.PHONY: test test-fast bench-smoke lint
+
+# tier-1 verify (ROADMAP.md)
+test:
+	python -m pytest -x -q
+
+# quick signal: engine + dist + stores + workloads only
+test-fast:
+	python -m pytest -x -q tests/test_engine.py tests/test_dist.py \
+	    tests/test_dist_store.py tests/test_stores.py tests/test_workloads.py
+
+# tiny engine benchmark -> BENCH_engine.json (perf trajectory file)
+bench-smoke:
+	python -m benchmarks.run --only engine_json --fast
+
+lint:
+	@command -v ruff >/dev/null 2>&1 \
+	    && ruff check src tests benchmarks \
+	    || { echo "ruff not installed; falling back to compileall"; \
+	         python -m compileall -q src tests benchmarks; }

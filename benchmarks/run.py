@@ -17,6 +17,10 @@ import time
 
 import numpy as np
 
+import json
+
+import jax
+
 from repro.core.sim import SimParams, make_streams, run_sim
 from repro.core.types import OpBatch, OpKind, SyncMode
 from repro.stores import PointerArray, RaceHash, SmartART
@@ -205,8 +209,47 @@ def table_engine_io(fast=False):
           "store,mode,mn_iops,writes,cas,retries,combined,mn_bytes", rows)
 
 
+def bench_engine_json(fast=False, path="BENCH_engine.json"):
+    """Machine-readable engine benchmark: device throughput of the jitted
+    ``apply_batch`` plus the per-window verb bill, per SyncMode — the perf
+    trajectory file CI and later PRs diff against."""
+    n_slots, b = (4096, 1024) if fast else (65_536, 4096)
+    windows = 4 if fast else 8
+    out = {"config": {"n_slots": n_slots, "batch": b, "windows": windows,
+                      "workload": "write-intensive", "n_cns": 16}}
+    for mode in MODES:
+        pa0 = PointerArray.create(n_slots, mode=mode).populate(
+            np.arange(n_slots), np.arange(n_slots))
+        batches = [OpBatch.make(o.kinds, o.keys % n_slots, o.values, n_cns=16)
+                   for o in (generate_ops(WORKLOADS["write-intensive"],
+                                          n_slots, n_slots, b, seed=w)
+                             for w in range(windows))]
+        _, wres, _ = pa0.apply(batches[0])          # warm up the jit cache
+        jax.block_until_ready(wres.ok)              # ... and its async dispatch
+        pa = pa0                                    # time from the pristine store
+        t0 = time.time()
+        for batch in batches:
+            pa, res, io = pa.apply(batch)
+        jax.block_until_ready(res.ok)
+        dt = time.time() - t0
+        d = io.as_dict()                            # last window's bill
+        d["throughput_mops"] = round(windows * b / dt / 1e6, 4)
+        d["wall_s"] = round(dt, 4)
+        out[mode.name] = d
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"\n== engine_json -> {path} ==")
+    for m in MODES:
+        d = out[m.name]
+        print(f"{m.name:6s} thr={d['throughput_mops']:8.3f} Mops/s "
+              f"mn_iops={d['mn_iops']:8d} writes={d['writes']:6d} "
+              f"cas={d['cas']:6d} combined={d['combined']:6d}")
+    return out
+
+
 FIGS = {
     "fig11": fig11_12_throughput_latency,
+    "engine_json": bench_engine_json,
     "fig13": fig13_skew,
     "fig14": fig14_accuracy,
     "fig15": fig15_params,
@@ -225,6 +268,9 @@ def main():
     ap.add_argument("--fast", action="store_true")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(FIGS)
+    unknown = [n for n in names if n not in FIGS]
+    if unknown:
+        raise SystemExit(f"unknown figure(s) {unknown}; choose from {list(FIGS)}")
     t0 = time.time()
     for name in names:
         t1 = time.time()

@@ -69,6 +69,11 @@ def restore(path: str, tree_like, shardings=None, step: int | None = None):
     out = []
     for name, like, sh in zip(flat_names, leaves, sh_leaves):
         arr = data[name]
+        tgt = np.dtype(like.dtype)
+        if arr.dtype.kind == "V" and arr.dtype.itemsize == tgt.itemsize:
+            # npz stores ml_dtypes (bfloat16, ...) as raw void bytes; the
+            # payload is exact, only the descriptor is lost — reinterpret
+            arr = arr.view(tgt)
         if list(arr.shape) != list(like.shape):
             raise ValueError(f"{name}: ckpt {arr.shape} != model {like.shape}")
         a = jax.device_put(arr.astype(like.dtype), sh) if sh is not None \

@@ -32,6 +32,12 @@ derived from §2.2, §2.3, §4.2, Fig 9-10:
 Local WC (applied to every scheme, §5.1) first collapses same-(key, CN)
 writers to one effective writer; CIDER's global WC collapses same-key writers
 across CNs to one executor (§4.2.1).
+
+The shard_map path (``repro.dist.store``) partitions the store over the
+``data`` mesh axis and calls ``apply_batch`` per shard with ``owned``/
+``slot_base``: the data plane then covers only the shard's keys while the
+credit plane still sees the full window (see ``apply_batch``'s docstring and
+DESIGN.md §3.3).
 """
 from __future__ import annotations
 
@@ -176,34 +182,50 @@ def _backoff_polls(wait_rounds, cap):
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
                 batch: OpBatch, valid: jax.Array | None = None,
+                owned: jax.Array | None = None,
+                slot_base: jax.Array | None = None,
                 ) -> tuple[StoreState, CreditState, Results, IOMetrics]:
-    """Execute one synchronization window. See module docstring."""
+    """Execute one synchronization window. See module docstring.
+
+    Sharded operation (``repro.dist.store``): ``owned`` masks the ops whose
+    key's slot lives in this shard, and ``slot_base`` is the shard's first
+    global slot (store arrays are indexed by ``keys - slot_base``).  The
+    *data plane* (linearization, commits, results, I/O metering) runs on the
+    owned subset only; the *credit plane* (contention-aware path decisions
+    and AIMD feedback, §4.3) runs on the FULL batch with global keys on every
+    shard, so the replicated credit table evolves identically everywhere and
+    per-shard I/O sums to the single-device bill exactly.
+    """
     b = batch.kinds.shape[0]
     if valid is None:
         valid = batch.kinds != OpKind.NOP
     else:
         valid = valid & (batch.kinds != OpKind.NOP)
+    # valid: ops present in the window (credit plane); valid_o: ops whose
+    # store state this shard owns (data plane).  Identical when not sharded.
+    valid_o = valid if owned is None else valid & owned
+    base = jnp.int32(0) if slot_base is None else jnp.asarray(slot_base, jnp.int32)
     kinds, keys, values, pos, cn = (batch.kinds, batch.keys, batch.values,
                                     batch.pos, batch.cn)
-    is_search = (kinds == OpKind.SEARCH) & valid
-    is_insert = (kinds == OpKind.INSERT) & valid
-    is_update = (kinds == OpKind.UPDATE) & valid
-    is_delete = (kinds == OpKind.DELETE) & valid
-    is_write = is_insert | is_update | is_delete
+    is_search = (kinds == OpKind.SEARCH) & valid_o
+    is_insert = (kinds == OpKind.INSERT) & valid_o
+    is_update = (kinds == OpKind.UPDATE) & valid_o
+    is_delete = (kinds == OpKind.DELETE) & valid_o
+    upd_full = (kinds == OpKind.UPDATE) & valid
 
     # ---- 1. linearize: one segmented scan serializes every slot's queue ----
-    plan_all = wc.plan_combine(keys, pos, valid)
+    plan_all = wc.plan_combine(keys, pos, valid_o)
     perm = plan_all.perm
     e_t, c_t = _op_transfer(kinds[perm], values[perm])
     # invalid ops are identity transforms
-    v_sorted = valid[perm]
+    v_sorted = valid_o[perm]
     ident_e = jnp.broadcast_to(jnp.array([0, 1], jnp.int32), (b, 2))
     ident_c = jnp.full((b, 2), _KEEP, jnp.int32)
     e_t = jnp.where(v_sorted[:, None], e_t, ident_e)
     c_t = jnp.where(v_sorted[:, None], c_t, ident_c)
     incl_e, incl_c, _ = _segmented_scan(e_t, c_t, plan_all.is_first)
-    # incoming (pre-window) state per sorted element's slot
-    slot = jnp.clip(keys[perm], 0, cfg.n_slots - 1)
+    # incoming (pre-window) state per sorted element's slot (shard-local)
+    slot = jnp.clip(keys[perm] - base, 0, cfg.n_slots - 1)
     p = state.ptr[slot]
     e_init = p != NULL_PTR
     v_init = jnp.where(e_init, state.heap[jnp.clip(p, 0)], _NONE)
@@ -219,7 +241,8 @@ def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
             jnp.where(ks == OpKind.INSERT, ~e_before,
              jnp.where((ks == OpKind.UPDATE) | (ks == OpKind.DELETE), e_before, False)))
     ok_s = ok_s & v_sorted
-    val_s = jnp.where((ks == OpKind.SEARCH) & e_before, v_before, _NONE)
+    val_s = jnp.where((ks == OpKind.SEARCH) & e_before & v_sorted,
+                      v_before, _NONE)
     # state AFTER the last op of each queue -> new slot contents
     e_fin, v_fin = _apply(incl_e, incl_c, e_init, v_init)
     seg_changed = ok_s & (ks != OpKind.SEARCH)          # any successful IDU
@@ -244,14 +267,17 @@ def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
            .add(dver[seg], mode="drop")) % 16
 
     # ---- 3. synchronization-mode decision (CIDER credit split, §4.3) ----
-    upd = is_update
+    # Decided on the FULL window (upd_full, global keys): every shard's
+    # replica of the credit table sees every op and stays bit-identical.
     if cfg.mode == SyncMode.CIDER:
-        credits2, pess = credit_decide(credits, keys, upd, credits.credit.shape[0])
+        credits2, pess_full = credit_decide(credits, keys, upd_full,
+                                            credits.credit.shape[0])
     elif cfg.mode in (SyncMode.MCS, SyncMode.SPIN):
-        credits2, pess = credits, upd
+        credits2, pess_full = credits, upd_full
     else:  # OSYNC
-        credits2, pess = credits, jnp.zeros_like(upd)
-    opt_upd = upd & ~pess
+        credits2, pess_full = credits, jnp.zeros_like(upd_full)
+    pess = pess_full & valid_o
+    opt_upd = is_update & ~pess_full
 
     # ---- 4. effective writers after local WC (per (key, CN) group) --------
     # Local WC combines same-CN UPDATEs (applied to every baseline, §5.1);
@@ -270,8 +296,8 @@ def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
         return jnp.sum(x.astype(i64))
 
     n_found_search = jnp.sum(((ks == OpKind.SEARCH) & ok_s).astype(jnp.int32))
-    reads = s(valid) * cfg.index_read_iops + n_found_search
-    mn_bytes = (s(valid) * cfg.index_read_bytes + n_found_search * cfg.value_bytes)
+    reads = s(valid_o) * cfg.index_read_iops + n_found_search
+    mn_bytes = (s(valid_o) * cfg.index_read_bytes + n_found_search * cfg.value_bytes)
     writes = jnp.zeros((), i64)
     cas = jnp.zeros((), i64)
     faa = jnp.zeros((), i64)
@@ -355,11 +381,27 @@ def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
     executed = writes
 
     # ---- 6. credit feedback (§4.3, Algorithm 1 lines 13-22) ---------------
+    # Like the decision, feedback runs on the FULL window so replicated
+    # credit tables stay identical across shards; when unsharded the full
+    # masks ARE the owned masks and nothing is recomputed.
     if cfg.mode == SyncMode.CIDER:
+        if owned is None:
+            pess_fb, batch_fb = loc_exec_pess, per_op_batch
+            opt_fb, retry_fb = loc_exec_opt | is_insert, per_op_retries
+        else:
+            opt_upd_full = upd_full & ~pess_full
+            loc_opt_full = (wc.local_executors(keys, cn, pos, opt_upd_full)
+                            if cfg.local_wc else opt_upd_full)
+            plan_p_fb = wc.per_key_stats(keys, pos, pess_full)
+            plan_o_fb = wc.per_key_stats(keys, pos, loc_opt_full)
+            pess_fb = pess_full
+            batch_fb = jnp.where(pess_full, plan_p_fb.mult_of, 1)
+            opt_fb = loc_opt_full | ((kinds == OpKind.INSERT) & valid)
+            retry_fb = jnp.where(loc_opt_full, plan_o_fb.rank_of, 0)
         credits3 = credit_feedback(
             credits2, keys, credits.credit.shape[0],
-            pess=loc_exec_pess, wc_batch=per_op_batch,
-            opt=loc_exec_opt | is_insert, n_retry=per_op_retries,
+            pess=pess_fb, wc_batch=batch_fb,
+            opt=opt_fb, n_retry=retry_fb,
             initial_credit=cfg.initial_credit,
             hotness_threshold=cfg.hotness_threshold,
             aimd_factor=cfg.aimd_factor)
@@ -369,7 +411,8 @@ def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
     # ---- 7. epoch FAA bookkeeping (fault-tolerance heartbeat, §4.6) -------
     if cfg.mode in (SyncMode.MCS, SyncMode.CIDER):
         rel = loc_exec_pess | is_delete
-        epoch = state.epoch.at[jnp.where(rel, keys, 0)].add(rel.astype(jnp.int32))
+        epoch = state.epoch.at[jnp.where(rel, keys - base, cfg.n_slots)].add(
+            rel.astype(jnp.int32), mode="drop")
     else:
         epoch = state.epoch
 

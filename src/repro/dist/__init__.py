@@ -1,0 +1,18 @@
+"""The distribution layer: mesh context, logical-axis sharding rules,
+shard_map compute paths, cross-node gradient compression, and the sharded
+CIDER dataplane.
+
+Layering (see DESIGN.md §3):
+
+  models/* ──shard(x, logical_axes)──▶ dist.ctx ──spec_for──▶ dist.sharding
+  launch/* ──param/batch/state shardings───────────────────▶ dist.sharding
+  dist.decode_attn   — one-pass shard_map decode attention (cache-sharded)
+  dist.embed_grad    — write-combined sparse embedding gradients (§4.2 idea)
+  dist.compress      — int8 + error-feedback gradient compression
+  dist.store         — StoreState partitioned over the "data" mesh axis;
+                       engine.apply_batch under shard_map, ops routed to
+                       their owning shard
+
+Everything degrades to a no-op / single-shard path without a mesh, so the
+same model and engine code runs on one CPU device and on a multi-pod mesh.
+"""

@@ -1,0 +1,44 @@
+"""int8 gradient compression with error feedback for cross-node traffic.
+
+Each leaf is scaled to int8 by its max-abs (one f32 scale per leaf — an
+Elias-Fano-style split of a tensor into a tiny high-order part and a dense
+low-order payload), and the quantization residual is carried to the next
+step (error feedback), so the *time-averaged* applied gradient is unbiased:
+the bias of round-to-nearest is re-injected instead of lost, and the 4x
+traffic reduction costs no asymptotic accuracy (tests check the running mean
+converges to the true gradient).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["zeros_residuals", "ef_compress_tree", "ef_decompress_tree"]
+
+
+def zeros_residuals(tree):
+    """Initial (zero) error-feedback residuals for a gradient tree."""
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+
+
+def _compress_leaf(g, r):
+    x = g.astype(jnp.float32) + r
+    scale = jnp.maximum(jnp.max(jnp.abs(x)) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale, x - q.astype(jnp.float32) * scale
+
+
+def ef_compress_tree(grads, residuals):
+    """(grads, residuals) -> (int8 tree, scale tree, new residuals)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    res = treedef.flatten_up_to(residuals)
+    out = [_compress_leaf(g, r) for g, r in zip(leaves, res)]
+    qs, scales, new_res = zip(*out) if out else ((), (), ())
+    return (treedef.unflatten(qs), treedef.unflatten(scales),
+            treedef.unflatten(new_res))
+
+
+def ef_decompress_tree(q_tree, scale_tree):
+    """Inverse of ``ef_compress_tree``: int8 + per-leaf scale -> f32 tree."""
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s,
+                        q_tree, scale_tree)

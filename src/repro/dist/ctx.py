@@ -1,0 +1,47 @@
+"""Mesh context + activation sharding constraints.
+
+``use_mesh`` installs a mesh for the duration of a ``with`` block;
+``shard(x, logical_axes)`` is the single entry point models use to annotate
+activations.  Without an installed mesh it is an exact no-op, so every model
+runs unchanged on a single CPU device; with a mesh it lowers to
+``with_sharding_constraint`` using the logical-axis rules of
+``repro.dist.sharding`` (divisibility-checked, replication fallback).
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+from jax.sharding import NamedSharding
+
+__all__ = ["use_mesh", "current_mesh", "shard"]
+
+_MESH_STACK: list = []
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Install ``mesh`` as the ambient mesh for ``shard`` constraints."""
+    _MESH_STACK.append(mesh)
+    try:
+        yield mesh
+    finally:
+        _MESH_STACK.pop()
+
+
+def current_mesh():
+    """The innermost installed mesh, or None outside any ``use_mesh``."""
+    return _MESH_STACK[-1] if _MESH_STACK else None
+
+
+def shard(x, logical_axes):
+    """Constrain ``x`` to the sharding implied by ``logical_axes``.
+
+    A no-op when no mesh is installed — models call this unconditionally.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    from repro.dist.sharding import spec_for
+    spec = spec_for(x.shape, logical_axes, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,47 @@
+"""Write-combined sparse embedding gradients (the §4.2 idea applied to
+training).
+
+A token batch UPDATEs embedding rows exactly like concurrent KV writers
+UPDATE a slot: duplicated ids are a wait queue on one row.  The dense
+gradient scatters every (token, grad) pair — O(T) row writes; the combined
+path groups by id with the same sort/segment primitive as
+``core.combine.plan_combine`` and emits ONE summed row per unique id, so the
+cross-node write traffic is proportional to *unique* ids (heavy-tailed token
+distributions make this a large constant factor, exactly Fig 4's argument).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["dense_embed_grad", "combined_embed_grad", "apply_sparse_grad"]
+
+
+def dense_embed_grad(ids, grads, vocab: int):
+    """Reference: full (vocab, D) gradient via scatter-add of every token."""
+    d = grads.shape[-1]
+    return jnp.zeros((vocab, d), grads.dtype).at[ids].add(grads)
+
+
+@jax.jit
+def combined_embed_grad(ids, grads):
+    """Combine per-token gradients by id: returns (hids, rows, uniq), all
+    length-T, where ``uniq`` marks one representative per distinct id and
+    ``rows[i]`` is the summed gradient of that id (zeros elsewhere)."""
+    t = ids.shape[0]
+    pos = jnp.arange(t, dtype=jnp.int32)
+    order = jnp.lexsort((pos, ids))
+    ids_s, g_s = ids[order], grads[order]
+    is_first = jnp.concatenate([jnp.ones((1,), bool), ids_s[1:] != ids_s[:-1]])
+    seg = jnp.cumsum(is_first.astype(jnp.int32)) - 1
+    summed = jax.ops.segment_sum(g_s, seg, num_segments=t)
+    rows = jnp.where(is_first[:, None], summed[seg], 0.0)
+    return jnp.where(is_first, ids_s, 0), rows, is_first
+
+
+@jax.jit
+def apply_sparse_grad(table, hids, rows, uniq, lr: float = 1.0):
+    """SGD-apply a combined sparse gradient: one row write per unique id."""
+    vocab = table.shape[0]
+    idx = jnp.where(uniq, hids, vocab)          # non-representatives drop
+    return table.at[idx].add(-lr * rows.astype(table.dtype), mode="drop")

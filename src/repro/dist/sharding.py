@@ -1,0 +1,108 @@
+"""Logical-axis -> PartitionSpec rules (see DESIGN.md §3.2).
+
+One table maps every logical axis name used by ``models/*`` and the engine to
+an ordered list of candidate mesh-axis tuples.  ``spec_for`` walks a shape's
+logical axes left to right, assigning the first candidate whose mesh axes are
+all present, unused so far, and whose product divides the dimension —
+otherwise the dimension is replicated.  This gives FSDP ("embed" over
+``data``), TP ("heads"/"mlp"/"experts"/"vocab" over ``model``), and DP
+(batch/token axes over ``("pod", "data")``) on any mesh shape without
+per-model spec tables, and degrades each axis independently to replication
+when a reduced (smoke) dim is not divisible.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.common import Param
+
+__all__ = ["spec_for", "param_shardings", "batch_shardings",
+           "decode_state_shardings", "LOGICAL_RULES"]
+
+# logical axis -> ordered candidate mesh-axis tuples (first fit wins)
+_DP = (("pod", "data"), ("data",))
+LOGICAL_RULES: dict[str, tuple[tuple[str, ...], ...]] = {
+    # data-parallel axes (batch / token / per-row dispatch)
+    "batch": _DP, "act_batch": _DP, "act_tokens": _DP, "act_rows": _DP,
+    # FSDP: the embedding dim of weights shards over the data axis
+    "embed": (("data",),),
+    # tensor-parallel axes
+    "heads": (("model",),), "kv": (("model",),), "mlp": (("model",),),
+    "experts": (("model",),), "vocab": (("model",),),
+    "act_heads": (("model",),), "act_kv": (("model",),),
+    "act_mlp": (("model",),), "act_vocab": (("model",),),
+    "act_experts": (("model",),),
+    # decode KV-cache sequence axis (dist.decode_attn shards it)
+    "act_cache_seq": (("model",),),
+    # sharded CIDER dataplane: store slots / heap partition over data
+    "slots": (("data",),), "heap": (("data",),),
+    # replicated-only axes get no entry: layers, head_dim, conv, front, ...
+}
+
+
+def _mesh_shape(mesh: Any) -> dict[str, int]:
+    # Mesh.shape is an OrderedDict axis->size; tests also pass bare objects
+    # exposing just ``.shape`` as a dict.
+    return dict(mesh.shape)
+
+
+def spec_for(shape: tuple[int, ...], logical_axes, mesh: Any) -> P:
+    """Map a shape's logical axes to a PartitionSpec on ``mesh``.
+
+    Each mesh axis is assigned at most once; a dimension that cannot be
+    sharded (unknown name, missing mesh axis, or not divisible by the mesh
+    axes' product) is replicated.
+    """
+    sizes = _mesh_shape(mesh)
+    logical_axes = tuple(logical_axes or ())
+    if len(logical_axes) < len(shape):
+        logical_axes = logical_axes + (None,) * (len(shape) - len(logical_axes))
+    used: set[str] = set()
+    out: list = []
+    for dim, name in zip(shape, logical_axes):
+        assigned = None
+        for cand in LOGICAL_RULES.get(name, ()):  # type: ignore[arg-type]
+            if any(a not in sizes or a in used for a in cand):
+                continue
+            prod = 1
+            for a in cand:
+                prod *= sizes[a]
+            if prod > 1 and dim % prod == 0:
+                assigned = cand if len(cand) > 1 else cand[0]
+                used.update(cand)
+                break
+        out.append(assigned)
+    return P(*out)
+
+
+def param_shardings(boxed: Any, mesh):
+    """NamedShardings for a boxed (``Param``) tree, e.g. ``init_abstract()``."""
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, spec_for(p.value.shape, p.axes, mesh)),
+        boxed, is_leaf=lambda x: isinstance(x, Param))
+
+
+def batch_shardings(bspec: Any, mesh):
+    """Input-batch shardings: leading axis is the global batch, rest local."""
+    def one(leaf):
+        axes = ("batch",) + (None,) * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, spec_for(leaf.shape, axes, mesh))
+    return jax.tree.map(one, bspec)
+
+
+def decode_state_shardings(state_spec: Any, mesh):
+    """Decode-state shardings: axis 0 is the stacked layers axis, axis 1 the
+    batch; KV caches additionally shard their heads axis (-2) over model."""
+    def one(path, leaf):
+        nd = len(leaf.shape)
+        axes: list = [None] * nd
+        if nd >= 2:
+            axes[1] = "batch"
+        name = path[-1].key if path else ""
+        if name in ("k", "v") and nd >= 4:
+            axes[-2] = "kv"
+        return NamedSharding(mesh, spec_for(leaf.shape, tuple(axes), mesh))
+    return jax.tree_util.tree_map_with_path(one, state_spec)

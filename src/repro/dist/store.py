@@ -1,0 +1,143 @@
+"""The sharded CIDER dataplane: ``StoreState`` partitioned over a mesh axis.
+
+FUSEE/DINOMO-style memory-pool partitioning: slot ``k`` (and its heap) is
+owned by shard ``k // slots_per_shard`` along the ``data`` mesh axis.  One
+synchronization window executes as a single ``shard_map``: every shard sees
+the (replicated) op batch, masks the ops whose keys it owns, and runs the
+unmodified ``engine.apply_batch`` on its slot/heap partition; the engine's
+credit plane runs on the full batch on every shard (see ``apply_batch``'s
+docstring), so the replicated credit table stays bit-identical and no
+cross-shard traffic exists beyond the final psum that assembles per-op
+results and the global I/O bill.
+
+Equivalence contract (tested in ``tests/test_dist_store.py``): for any mesh
+size that divides ``n_slots``/``heap_slots``, the logical store view
+(exists/value per slot), ``ver``/``epoch``, per-op ``Results``, the credit
+table, and every ``IOMetrics`` counter are identical to the single-device
+engine, for all four ``SyncMode``s.  Only the physical heap layout differs
+(each shard packs its own commits).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import engine
+from repro.core.engine import Results, StoreState
+from repro.core.types import NULL_PTR, EngineConfig, OpBatch, OpKind
+
+__all__ = ["shard_extents", "sharded_store_init", "sharded_populate",
+           "sharded_store_view", "apply_batch_sharded"]
+
+_NONE = jnp.int32(-1)
+
+
+def shard_extents(cfg: EngineConfig, n_shards: int) -> tuple[int, int]:
+    """(slots_per_shard, heap_per_shard); raises unless both divide evenly."""
+    if cfg.n_slots % n_shards or cfg.heap_slots % n_shards:
+        raise ValueError(
+            f"n_slots={cfg.n_slots} / heap_slots={cfg.heap_slots} must be "
+            f"divisible by n_shards={n_shards}")
+    return cfg.n_slots // n_shards, cfg.heap_slots // n_shards
+
+
+def sharded_store_init(cfg: EngineConfig, n_shards: int) -> StoreState:
+    """Like ``store_init`` but with a per-shard heap bump cursor (n_shards,).
+
+    ``ptr`` holds *shard-local* heap indices; arrays keep their global length
+    and are block-partitioned by the ``shard_map`` in ``apply_batch_sharded``.
+    """
+    shard_extents(cfg, n_shards)
+    st = engine.store_init(cfg)
+    return dataclasses.replace(st, heap_top=jnp.zeros((n_shards,), jnp.int32))
+
+
+def sharded_populate(cfg: EngineConfig, n_shards: int, state: StoreState,
+                     keys, values) -> StoreState:
+    """Bulk-load distinct KV pairs, packing each shard's heap separately."""
+    per, hper = shard_extents(cfg, n_shards)
+    keys = jnp.asarray(keys, jnp.int32)
+    values = jnp.asarray(values, jnp.int32)
+    n = keys.shape[0]
+    owner = keys // per
+    pos = jnp.arange(n, dtype=jnp.int32)
+    order = jnp.lexsort((pos, owner))
+    own_s = owner[order]
+    is_first = jnp.concatenate([jnp.ones((1,), bool), own_s[1:] != own_s[:-1]])
+    seg = jnp.cumsum(is_first.astype(jnp.int32)) - 1
+    seg_start = jax.ops.segment_min(pos, seg, num_segments=n)
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(pos - seg_start[seg])
+    loc = state.heap_top[owner] + rank                    # shard-local index
+    heap = state.heap.at[owner * hper + loc].set(values)
+    ptr = state.ptr.at[keys].set(loc)
+    counts = jnp.zeros((n_shards,), jnp.int32).at[owner].add(1)
+    return dataclasses.replace(state, ptr=ptr, heap=heap,
+                               heap_top=state.heap_top + counts)
+
+
+def sharded_store_view(cfg: EngineConfig, n_shards: int, state: StoreState
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Logical (exists, value) view of a sharded store (cf. ``store_view``)."""
+    per, hper = shard_extents(cfg, n_shards)
+    owner = jnp.arange(cfg.n_slots, dtype=jnp.int32) // per
+    exists = state.ptr != NULL_PTR
+    val = jnp.where(exists,
+                    state.heap[owner * hper + jnp.clip(state.ptr, 0)], _NONE)
+    return exists, val
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_fn(cfg: EngineConfig, mesh, axis: str):
+    n_shards = int(mesh.shape[axis])
+    per, hper = shard_extents(cfg, n_shards)
+    lcfg = dataclasses.replace(cfg, n_slots=per, heap_slots=hper)
+    st_spec = StoreState(ptr=P(axis), ver=P(axis), epoch=P(axis),
+                         heap=P(axis), heap_top=P(axis))
+
+    def run(state, credits, batch, valid):
+        base = jax.lax.axis_index(axis).astype(jnp.int32) * per
+        owned = (batch.keys >= base) & (batch.keys < base + per)
+        st = dataclasses.replace(state, heap_top=state.heap_top[0])
+        st2, cr2, res, io = engine.apply_batch(
+            lcfg, st, credits, batch, valid=valid, owned=owned,
+            slot_base=base)
+        st2 = dataclasses.replace(st2, heap_top=st2.heap_top[None])
+
+        def psum(x):
+            return jax.lax.psum(x, axis)
+        # Non-owning shards emit each field's neutral element, so one psum
+        # (offset for the non-zero defaults) reassembles exact per-op results.
+        res2 = Results(
+            ok=psum(res.ok.astype(jnp.int32)) > 0,
+            value=psum(res.value - _NONE) + _NONE,
+            pessimistic=psum(res.pessimistic.astype(jnp.int32)) > 0,
+            combined=psum(res.combined.astype(jnp.int32)) > 0,
+            wc_batch=psum(res.wc_batch - 1) + 1,
+            retries=psum(res.retries),
+        )
+        return st2, cr2, res2, jax.tree.map(psum, io)
+
+    fn = shard_map(run, mesh=mesh,
+                   in_specs=(st_spec, P(), P(), P()),
+                   out_specs=(st_spec, P(), P(), P()),
+                   check_rep=False)
+    return jax.jit(fn)
+
+
+def apply_batch_sharded(cfg: EngineConfig, mesh, state: StoreState,
+                        credits, batch: OpBatch,
+                        valid: jax.Array | None = None, *, axis: str = "data"
+                        ) -> tuple[StoreState, object, Results, object]:
+    """``engine.apply_batch`` under shard_map on ``mesh.shape[axis]`` shards.
+
+    Drop-in equivalent of the single-device engine (same signature modulo
+    mesh); ``state`` must come from ``sharded_store_init``/``sharded_populate``.
+    """
+    if valid is None:
+        valid = batch.kinds != OpKind.NOP
+    return _sharded_fn(cfg, mesh, axis)(state, credits, batch, valid)

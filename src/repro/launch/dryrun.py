@@ -28,7 +28,7 @@ from repro.dist.sharding import (batch_shardings, decode_state_shardings,
 from repro.launch.mesh import make_production_mesh
 from repro.models.common import unbox
 from repro.models.model import Model
-from repro.rooflines.hlo_parser import parse_hlo
+from repro.rooflines.hlo_parser import cost_dict, parse_hlo
 from repro.rooflines.roofline import model_flops, roofline
 from repro.train.optimizer import OptState, adamw_init, adamw_update
 
@@ -127,7 +127,7 @@ def run_cell(arch: str, cell: str, multi_pod: bool, outdir: str) -> dict:
             compiled = lowered.compile()
             t1 = time.time()
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis() or {}
+            cost = cost_dict(compiled)
             hlo = compiled.as_text()
             parsed = parse_hlo(hlo)
             kind, seq, gb = SHAPES[cell]

@@ -16,6 +16,8 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_local_mesh():
-    """Single-device mesh with the production axis names (CPU tests)."""
-    return jax.make_mesh((1, 1), ("data", "model"))
+def make_local_mesh(data: int = 1):
+    """CPU-test mesh with the production axis names.  ``data > 1`` (sharded
+    store tests) needs ``--xla_force_host_platform_device_count >= data``
+    (set in tests/conftest.py before jax backend init)."""
+    return jax.make_mesh((data, 1), ("data", "model"))

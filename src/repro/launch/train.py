@@ -21,6 +21,8 @@ import numpy as np
 from repro.ckpt.checkpoint import AsyncCheckpointer, latest_step, restore
 from repro.configs import get_config
 from repro.data.pipeline import DataConfig, Pipeline
+from repro.dist.compress import (ef_compress_tree, ef_decompress_tree,
+                                 zeros_residuals)
 from repro.ft.failures import FleetMonitor
 from repro.models.common import unbox
 from repro.models.model import Model
@@ -38,16 +40,25 @@ def main(argv=None):
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--ckpt_every", type=int, default=50)
     ap.add_argument("--log_every", type=int, default=5)
+    ap.add_argument("--int8-grads", action="store_true",
+                    help="int8 + error-feedback gradient compression "
+                         "(dist.compress) on the cross-node gradient path")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     model = Model(cfg)
     params = unbox(model.init(jax.random.key(0)))
     opt = adamw_init(params)
+    # error-feedback residuals are training state: they carry accumulated
+    # quantization error across steps AND restarts (checkpointed below) —
+    # an empty tuple when compression is off, so the default path pays
+    # nothing for them
+    residuals = zeros_residuals(params) if args.int8_grads else ()
     start_step = 0
     ckpt = AsyncCheckpointer(args.ckpt) if args.ckpt else None
     if ckpt and latest_step(args.ckpt) is not None:
-        (params, opt), start_step = restore(args.ckpt, (params, opt))
+        (params, opt, residuals), start_step = restore(
+            args.ckpt, (params, opt, residuals))
         print(f"restored step {start_step} from {args.ckpt}")
 
     pipe = Pipeline(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
@@ -55,17 +66,24 @@ def main(argv=None):
     monitor = FleetMonitor(n_workers=1)
 
     @jax.jit
-    def step_fn(params, opt, batch):
+    def step_fn(params, opt, batch, residuals):
         (loss, metrics), grads = jax.value_and_grad(
             model.loss_fn, has_aux=True)(params, batch)
+        if args.int8_grads:
+            # what crosses the node boundary is int8 + one scale per leaf;
+            # the rounding error is carried in ``residuals`` (error feedback)
+            q, scales, residuals = ef_compress_tree(grads, residuals)
+            grads = jax.tree.map(lambda g, d: d.astype(g.dtype),
+                                 grads, ef_decompress_tree(q, scales))
         params, opt, gnorm = adamw_update(params, grads, opt, lr=args.lr)
-        return params, opt, loss, gnorm
+        return params, opt, loss, gnorm, residuals
 
     losses = []
     for step in range(start_step, start_step + args.steps):
         t0 = time.time()
         batch = pipe.batch_at(step)
-        params, opt, loss, gnorm = step_fn(params, opt, batch)
+        params, opt, loss, gnorm, residuals = step_fn(params, opt, batch,
+                                                      residuals)
         loss = float(loss)
         losses.append(loss)
         monitor.beat(0, step_time_s=time.time() - t0)
@@ -73,9 +91,9 @@ def main(argv=None):
             print(f"step {step:5d} loss {loss:.4f} gnorm {float(gnorm):.3f} "
                   f"({time.time() - t0:.2f}s)", flush=True)
         if ckpt and step and step % args.ckpt_every == 0:
-            ckpt.save_async(step, (params, opt))
+            ckpt.save_async(step, (params, opt, residuals))
     if ckpt:
-        ckpt.save_async(start_step + args.steps, (params, opt))
+        ckpt.save_async(start_step + args.steps, (params, opt, residuals))
         ckpt.wait()
     print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
     assert np.isfinite(losses[-1])

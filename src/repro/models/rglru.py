@@ -47,28 +47,36 @@ def rglru_scan(x, w_input, w_rec, lam, h0=None):
 
 
 def rglru_step(h, x_t, w_input, w_rec, lam):
-    """One decode step.  h: (b, d); x_t: (b, d)."""
-    i_t = jax.nn.sigmoid(x_t @ w_input)
-    r_t = jax.nn.sigmoid(x_t @ w_rec)
+    """One decode step.  h: (b, d); x_t: (b, d).  Gates in f32, like the
+    prefill scan — mixed-precision drift between the two paths otherwise
+    breaks the decode==prefill state-handoff contract."""
+    xf = x_t.astype(jnp.float32)
+    i_t = jax.nn.sigmoid(xf @ w_input.astype(jnp.float32))
+    r_t = jax.nn.sigmoid(xf @ w_rec.astype(jnp.float32))
     log_a = -_C * jax.nn.softplus(lam)[None, :] * r_t
-    a = jnp.exp(log_a.astype(jnp.float32))
-    h = a * h + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) \
-        * (i_t * x_t).astype(jnp.float32)
+    a = jnp.exp(log_a)
+    h = a * h + jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i_t * xf)
     return h.astype(x_t.dtype), h
 
 
 def causal_conv1d(x, w):
-    """Depthwise causal conv.  x: (b, s, d); w: (k, d)."""
+    """Depthwise causal conv.  x: (b, s, d); w: (k, d).
+
+    Accumulates in f32 with ONE rounding to the input dtype so prefill and
+    ``conv1d_step`` decode round identically (bf16 add-chains otherwise
+    drift enough to flip argmaxes in the state-handoff tests)."""
     k = w.shape[0]
-    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
-    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (k - 1, 0), (0, 0)))
+    wf = w.astype(jnp.float32)
+    out = sum(xp[:, i:i + x.shape[1], :] * wf[i][None, None, :]
               for i in range(k))
-    return out
+    return out.astype(x.dtype)
 
 
 def conv1d_step(tail, x_t, w):
     """Decode conv step.  tail: (b, k-1, d) previous inputs; x_t: (b, d)."""
-    k = w.shape[0]
     window = jnp.concatenate([tail, x_t[:, None, :]], 1)     # (b, k, d)
-    y = jnp.einsum("bkd,kd->bd", window, w)
+    y = jnp.einsum("bkd,kd->bd", window.astype(jnp.float32),
+                   w.astype(jnp.float32)).astype(x_t.dtype)
     return y, window[:, 1:, :]

@@ -1,0 +1,13 @@
+"""Shared pytest setup.
+
+The XLA host device count must be pinned BEFORE jax initializes its backend
+(first device query locks it), so the sharded-store tests get a real >=2-way
+``data`` mesh on CPU.  conftest is imported before any test module, which is
+the only reliable hook for this.
+"""
+import os
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8").strip()

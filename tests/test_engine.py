@@ -22,6 +22,12 @@ except ImportError:  # pragma: no cover
 
 MODES = [SyncMode.OSYNC, SyncMode.SPIN, SyncMode.MCS, SyncMode.CIDER]
 
+# Compilation dominates this file's wall-clock: apply_batch retraces per
+# (mode, batch shape, store shape).  Every test below therefore sticks to
+# ONE canonical (n_slots, b) = (N_SLOTS, B) where the scenario allows, so
+# the four mode compiles from the first test are reused everywhere else.
+N_SLOTS, B = 32, 256
+
 
 def _cfg(mode, n_slots=64, heap=4096, **kw):
     return EngineConfig(n_slots=n_slots, heap_slots=heap, mode=mode, **kw)
@@ -60,7 +66,7 @@ def _random_ops(rng, b, n_slots, p_kinds=(0.3, 0.15, 0.4, 0.15)):
 @pytest.mark.parametrize("seed", [0, 1, 2])
 def test_mode_matches_oracle_mixed_idu(mode, seed):
     rng = np.random.default_rng(seed)
-    n_slots, b = 32, 256
+    n_slots, b = N_SLOTS, B
     pop_keys = rng.choice(n_slots, size=n_slots // 2, replace=False)
     pop_vals = rng.integers(0, 10_000, pop_keys.shape[0])
     kinds, keys, values = _random_ops(rng, b, n_slots)
@@ -77,7 +83,7 @@ def test_mode_matches_oracle_mixed_idu(mode, seed):
 
 def test_all_modes_agree_on_final_state():
     rng = np.random.default_rng(7)
-    n_slots, b = 48, 512
+    n_slots, b = N_SLOTS, B   # same shapes as above -> shared jit cache
     pop_keys = np.arange(n_slots)
     pop_vals = rng.integers(0, 10_000, n_slots)
     kinds, keys, values = _random_ops(rng, b, n_slots)
@@ -130,7 +136,7 @@ def test_cider_combines_hot_key_to_one_write():
 
 
 def test_mcs_linear_io_no_combining():
-    n = 32
+    n = 64   # same batch shape as the other hot-key tests (shared compile)
     kinds = np.full(n, OpKind.UPDATE, np.int32)
     keys = np.zeros(n, np.int32)
     values = np.arange(n, dtype=np.int32)
@@ -186,9 +192,12 @@ def test_search_sees_serialized_prefix():
 
 
 if HAVE_HYP:
-    @settings(max_examples=16, deadline=None)
+    # Shape variety is capped (2 slot counts x 2 batch sizes) so the worst
+    # case is 16 apply_batch compiles, not 36; deadline=None because a cold
+    # compile on one example would otherwise flake the whole test.
+    @settings(max_examples=8, deadline=None)
     @given(st.integers(0, 2**31 - 1), st.sampled_from(MODES),
-           st.sampled_from([1, 3, 6]), st.sampled_from([1, 64, 128]))
+           st.sampled_from([1, 6]), st.sampled_from([1, 64]))
     def test_property_oracle_equivalence(seed, mode, n_slots, b):
         rng = np.random.default_rng(seed)
         kinds, keys, values = _random_ops(rng, b, n_slots)

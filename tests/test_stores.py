@@ -81,6 +81,37 @@ def test_race_overflow_on_full_bucket():
         assert bool(np.asarray(res2.ok).all())
 
 
+def test_race_overflow_keys_absent_then_recoverable():
+    """Overflow semantics end-to-end: an op either overflows OR executes
+    (never both), overflowed keys stay absent, and freeing ways via DELETE
+    makes previously-overflowing keys insertable again."""
+    store = RaceHash.create(16, ways=2)          # 8 buckets x 2 ways
+    keys = (np.arange(64, dtype=np.int64) * 2654435761 % (1 << 20)).astype(np.int32)
+    kinds = np.full(64, OpKind.INSERT, np.int32)
+    vals = np.arange(64, dtype=np.int32)
+    store, res, io, ovf = store.apply(kinds, keys, vals)
+    ovf, ok = np.asarray(ovf), np.asarray(res.ok)
+    assert ovf.any() and ok.any()
+    assert not (ovf & ok).any()
+    bad = keys[ovf]
+    _, res2, _, _ = store.apply(np.full(bad.size, OpKind.SEARCH, np.int32),
+                                bad, np.zeros(bad.size, np.int32))
+    assert not np.asarray(res2.ok).any()
+    # free every occupied way, then retry a handful of overflowed keys:
+    # rank-0 reservations in an empty table must succeed
+    good = keys[ok]
+    store, res3, _, _ = store.apply(
+        np.full(good.size, OpKind.DELETE, np.int32), good,
+        np.zeros(good.size, np.int32))
+    assert bool(np.asarray(res3.ok).all())
+    retry = bad[:4]
+    store, res4, _, ovf4 = store.apply(
+        np.full(retry.size, OpKind.INSERT, np.int32), retry,
+        np.arange(retry.size, dtype=np.int32))
+    assert bool(np.asarray(res4.ok).any())
+    assert not (np.asarray(ovf4) & np.asarray(res4.ok)).any()
+
+
 def test_race_index_io_metered():
     store = RaceHash.create(1024)
     kinds = np.full(64, OpKind.SEARCH, np.int32)

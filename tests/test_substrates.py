@@ -24,8 +24,11 @@ from repro.workloads.ycsb import WORKLOADS
 
 
 def test_checkpoint_roundtrip(tmp_path):
+    # the bf16 leaf matters: npz stores ml_dtypes as raw void bytes and
+    # restore must reinterpret them (real param trees are bf16)
     tree = {"a": jnp.arange(12.0).reshape(3, 4),
-            "b": {"c": jnp.ones((5,), jnp.int32)}}
+            "b": {"c": jnp.ones((5,), jnp.int32)},
+            "w": jnp.full((4, 2), 1.5, jnp.bfloat16)}
     save(str(tmp_path), 7, tree)
     out, step = restore(str(tmp_path), jax.tree.map(jnp.zeros_like, tree))
     assert step == 7

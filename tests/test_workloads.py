@@ -1,0 +1,69 @@
+"""Workload-generator statistics: the Zipf samplers against the analytic
+pmf (chi-square), skew ordering, and determinism of the jittable path."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.workloads.zipf import (ZipfSampler, sample_zipf_jax, scramble,
+                                  zipf_cdf_table)
+
+N, THETA, DRAWS = 512, 0.99, 200_000
+
+
+def _zipf_pmf(n, theta):
+    w = np.arange(1, n + 1, dtype=np.float64) ** -theta
+    return w / w.sum()
+
+
+def _chi2(counts, probs, draws):
+    exp = probs * draws
+    return float(((counts - exp) ** 2 / np.maximum(exp, 1e-12)).sum())
+
+
+def test_zipf_sampler_chi_square():
+    """Rejection-inversion draws fit Zipf(theta) — chi-square over all 512
+    ranks stays below the 99.9% critical value of chi2(511) (~625)."""
+    x = ZipfSampler(N, THETA, seed=0).sample(DRAWS, scrambled=False)
+    counts = np.bincount(x, minlength=N)
+    assert counts.shape[0] == N          # never samples outside [0, n)
+    chi2 = _chi2(counts, _zipf_pmf(N, THETA), DRAWS)
+    assert chi2 < 650, f"chi2={chi2:.1f} for dof={N - 1}"
+
+
+def test_zipf_table_sampler_chi_square_and_determinism():
+    """The jittable CDF-table sampler matches the pmf on its exact head and
+    is counter-based deterministic (same key -> same stream)."""
+    cdf = jnp.asarray(zipf_cdf_table(N, THETA, head=N))
+    u = jax.random.uniform(jax.random.key(1), (DRAWS,))
+    ranks = np.asarray(jnp.searchsorted(cdf, u))
+    counts = np.bincount(ranks, minlength=N + 1)[:N]
+    chi2 = _chi2(counts, _zipf_pmf(N, THETA), DRAWS)
+    assert chi2 < 650, f"chi2={chi2:.1f}"
+    a = sample_zipf_jax(jax.random.key(7), (4096,), cdf, N, head=N)
+    b = sample_zipf_jax(jax.random.key(7), (4096,), cdf, N, head=N)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_zipf_skew_ordering():
+    """Higher theta -> more mass on the hottest key; theta=0 is uniform."""
+    top_frac = {}
+    for theta in (0.0, 0.8, 1.2):
+        x = ZipfSampler(10_000, theta, seed=2).sample(100_000, scrambled=False)
+        top_frac[theta] = float(np.mean(x == np.bincount(x).argmax()))
+    assert top_frac[0.0] < top_frac[0.8] < top_frac[1.2]
+    assert top_frac[0.0] < 5e-3          # uniform: no hot key
+    assert top_frac[1.2] > 0.05          # heavy skew: one very hot key
+
+
+def test_scramble_scatters_hot_ranks():
+    """Hot ranks land far apart in key space and keep their identity (the
+    scramble is a fixed function of the rank, not a fresh RNG draw)."""
+    n = 1 << 20
+    ranks = np.arange(16)
+    ids = scramble(ranks, n)
+    assert np.unique(ids).size == 16                     # no collisions here
+    np.testing.assert_array_equal(ids, scramble(ranks, n))
+    assert ids.max() - ids.min() > n // 8                # scattered, not adjacent
