@@ -7,12 +7,15 @@ export PYTHONPATH
 test:
 	python -m pytest -x -q
 
-# quick signal: engine + dist + stores + workloads only
+# quick signal: engine + runner + dist + stores + workloads only
 test-fast:
-	python -m pytest -x -q tests/test_engine.py tests/test_dist.py \
-	    tests/test_dist_store.py tests/test_stores.py tests/test_workloads.py
+	python -m pytest -x -q tests/test_engine.py tests/test_runner.py \
+	    tests/test_dist.py tests/test_dist_store.py tests/test_stores.py \
+	    tests/test_workloads.py
 
-# tiny engine benchmark -> BENCH_engine.json (perf trajectory file)
+# tiny engine benchmark on the fused runner -> BENCH_engine.fast.json
+# (the committed full-size baseline BENCH_engine.json is regenerated with
+#  `python -m benchmarks.run --only engine_json`, no --fast)
 bench-smoke:
 	python -m benchmarks.run --only engine_json --fast
 

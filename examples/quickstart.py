@@ -9,9 +9,10 @@ point in one table (O-SYNC pays O(n^2) retries; CIDER combines hot writes).
 """
 import numpy as np
 
-from repro.core.types import OpBatch, SyncMode
+from repro.core import runner
+from repro.core.types import SyncMode
 from repro.stores import PointerArray
-from repro.workloads.ycsb import WORKLOADS, generate_ops
+from repro.workloads.ycsb import WORKLOADS, generate_window_stream
 
 N_KEYS, N_OPS, N_CNS, WINDOWS = 4096, 4096, 16, 5
 
@@ -20,12 +21,12 @@ print(f"{'scheme':8s} {'MN IOPs':>9s} {'writes':>7s} {'CAS':>7s} "
 for mode in SyncMode:
     store = PointerArray.create(N_KEYS, mode=mode).populate(
         np.arange(N_KEYS), np.arange(N_KEYS))
-    for w in range(WINDOWS):   # credits warm up over windows
-        ops = generate_ops(WORKLOADS["write-intensive"], N_OPS, N_KEYS,
-                           n_clients=64, seed=w)
-        batch = OpBatch.make(ops.kinds, ops.keys % N_KEYS, ops.values,
-                             n_cns=N_CNS)
-        store, res, io = store.apply(batch)
-    d = io.as_dict()
+    # all WINDOWS windows run in ONE fused scan (credits warm up on-device)
+    ops = generate_window_stream(WORKLOADS["write-intensive"], WINDOWS, N_OPS,
+                                 N_KEYS, n_clients=64)
+    stream = runner.make_stream(ops.kinds, ops.keys % N_KEYS, ops.values,
+                                n_cns=N_CNS)
+    store, res, ios = store.apply_stream(stream, io_per_window=True)
+    d = runner.io_window(ios, -1).as_dict()   # the steady-state window
     print(f"{mode.name:8s} {d['mn_iops']:9d} {d['writes']:7d} {d['cas']:7d} "
           f"{d['retries']:8d} {d['combined']:9d} {d['mn_bytes']/1024:8.1f}")

@@ -1,6 +1,8 @@
 """The paper's primary contribution: the CIDER synchronization engine.
 
 * ``engine``   — batched SPMD dataplane (4 sync modes, exact verb metering)
+* ``runner``   — fused multi-window execution (one scan for W windows) and
+  the MN-IOPS-modeled throughput metric
 * ``combine``  — global write-combining primitives (sort / segment / rank)
 * ``credits``  — contention-aware AIMD credit tables (Algorithm 1)
 * ``protocol``/``simnet``/``sim`` — the testbed-calibrated protocol simulator

@@ -60,11 +60,9 @@ def plan_combine(keys: jax.Array, pos: jax.Array, valid: jax.Array) -> CombinePl
     ones = jnp.ones((b,), jnp.int32)
     counts = jax.ops.segment_sum(ones, seg, num_segments=b)   # per-segment length
     run_length = counts[seg]
-    starts = jnp.cumsum(jnp.where(is_first, run_length, 0)) - jnp.where(is_first, run_length, 0)
     # rank within run = position - start of my segment
     seg_start = jax.ops.segment_min(jnp.arange(b, dtype=jnp.int32), seg, num_segments=b)
     rank = jnp.arange(b, dtype=jnp.int32) - seg_start[seg]
-    del starts
     valid_sorted = valid[order]
     n_unique = jnp.sum(is_first & valid_sorted).astype(jnp.int32)
     return CombinePlan(

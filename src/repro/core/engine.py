@@ -315,29 +315,31 @@ def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
     mn_bytes += s(is_insert) * (cfg.value_bytes + cfg.ptr_bytes)
 
     # DELETEs: pessimistic modes lock (enqueue-CAS + ptr-CAS + epoch-FAA);
-    # OSYNC CAS-retries (worst-case serial like updates, no heap write).
+    # under OSYNC they CAS-retry in the SAME per-key optimistic queue as
+    # concurrent UPDATEs (both CAS the same pointer), metered jointly below.
     n_del = s(is_delete)
-    if cfg.mode == SyncMode.OSYNC:
-        plan_d = wc.per_key_stats(keys, pos, is_delete)
-        cas += s(is_delete) + plan_d.retry_sum
-        retries_total += plan_d.retry_sum
-        mn_bytes += (n_del + plan_d.retry_sum) * cfg.ptr_bytes
-    else:
+    if cfg.mode != SyncMode.OSYNC:
         cas += 2 * n_del
         faa += n_del
         mn_bytes += n_del * (2 * cfg.ptr_bytes + 8)
 
-    # UPDATE paths ------------------------------------------------------------
-    # optimistic subset (whole batch for OSYNC; cold keys for CIDER)
-    plan_o = wc.per_key_stats(keys, pos, loc_exec_opt)
-    m_opt_writes = s(loc_exec_opt)
+    # Optimistic CAS path -----------------------------------------------------
+    # One joint queue per key: UPDATE executors after local WC, plus (OSYNC
+    # only) DELETEs — cross-kind conflicts on a pointer retry against each
+    # other, so metering them as two independent queues undercounts retries.
+    if cfg.mode == SyncMode.OSYNC:
+        opt_queue = loc_exec_opt | is_delete
+    else:
+        opt_queue = loc_exec_opt
+    plan_o = wc.per_key_stats(keys, pos, opt_queue)
+    m_opt_writes = s(loc_exec_opt)                   # DELETEs write no heap
     writes += m_opt_writes
-    cas += m_opt_writes + plan_o.retry_sum
+    cas += s(opt_queue) + plan_o.retry_sum
     retries_total += plan_o.retry_sum
-    mn_bytes += (m_opt_writes * (cfg.value_bytes + cfg.ptr_bytes)
-                 + plan_o.retry_sum * cfg.ptr_bytes)
+    mn_bytes += (m_opt_writes * cfg.value_bytes
+                 + (s(opt_queue) + plan_o.retry_sum) * cfg.ptr_bytes)
     combined_total += s(opt_upd) - m_opt_writes      # local-WC combined
-    per_op_retries = jnp.where(loc_exec_opt, plan_o.rank_of, per_op_retries)
+    per_op_retries = jnp.where(opt_queue, plan_o.rank_of, per_op_retries)
     per_op_combined = per_op_combined | (opt_upd & ~loc_exec_opt)
 
     # pessimistic subset

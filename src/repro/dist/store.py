@@ -29,10 +29,11 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import engine
 from repro.core.engine import Results, StoreState
+from repro.core.runner import WindowStream
 from repro.core.types import NULL_PTR, EngineConfig, OpBatch, OpKind
 
 __all__ = ["shard_extents", "sharded_store_init", "sharded_populate",
-           "sharded_store_view", "apply_batch_sharded"]
+           "sharded_store_view", "apply_batch_sharded", "run_windows_sharded"]
 
 _NONE = jnp.int32(-1)
 
@@ -91,13 +92,34 @@ def sharded_store_view(cfg: EngineConfig, n_shards: int, state: StoreState
     return exists, val
 
 
+def _psum_results(res: Results, axis: str) -> Results:
+    """Reassemble exact per-op results across shards: non-owning shards emit
+    each field's neutral element, so one psum (offset for the non-zero
+    defaults) recovers the single-device values.  Elementwise, so it works
+    unchanged on window-stacked ``(W, B)`` results."""
+    def psum(x):
+        return jax.lax.psum(x, axis)
+    return Results(
+        ok=psum(res.ok.astype(jnp.int32)) > 0,
+        value=psum(res.value - _NONE) + _NONE,
+        pessimistic=psum(res.pessimistic.astype(jnp.int32)) > 0,
+        combined=psum(res.combined.astype(jnp.int32)) > 0,
+        wc_batch=psum(res.wc_batch - 1) + 1,
+        retries=psum(res.retries),
+    )
+
+
+def _store_spec(axis: str) -> StoreState:
+    return StoreState(ptr=P(axis), ver=P(axis), epoch=P(axis),
+                      heap=P(axis), heap_top=P(axis))
+
+
 @functools.lru_cache(maxsize=None)
 def _sharded_fn(cfg: EngineConfig, mesh, axis: str):
     n_shards = int(mesh.shape[axis])
     per, hper = shard_extents(cfg, n_shards)
     lcfg = dataclasses.replace(cfg, n_slots=per, heap_slots=hper)
-    st_spec = StoreState(ptr=P(axis), ver=P(axis), epoch=P(axis),
-                         heap=P(axis), heap_top=P(axis))
+    st_spec = _store_spec(axis)
 
     def run(state, credits, batch, valid):
         base = jax.lax.axis_index(axis).astype(jnp.int32) * per
@@ -107,26 +129,50 @@ def _sharded_fn(cfg: EngineConfig, mesh, axis: str):
             lcfg, st, credits, batch, valid=valid, owned=owned,
             slot_base=base)
         st2 = dataclasses.replace(st2, heap_top=st2.heap_top[None])
-
-        def psum(x):
-            return jax.lax.psum(x, axis)
-        # Non-owning shards emit each field's neutral element, so one psum
-        # (offset for the non-zero defaults) reassembles exact per-op results.
-        res2 = Results(
-            ok=psum(res.ok.astype(jnp.int32)) > 0,
-            value=psum(res.value - _NONE) + _NONE,
-            pessimistic=psum(res.pessimistic.astype(jnp.int32)) > 0,
-            combined=psum(res.combined.astype(jnp.int32)) > 0,
-            wc_batch=psum(res.wc_batch - 1) + 1,
-            retries=psum(res.retries),
-        )
-        return st2, cr2, res2, jax.tree.map(psum, io)
+        return (st2, cr2, _psum_results(res, axis),
+                jax.tree.map(lambda x: jax.lax.psum(x, axis), io))
 
     fn = shard_map(run, mesh=mesh,
                    in_specs=(st_spec, P(), P(), P()),
                    out_specs=(st_spec, P(), P(), P()),
                    check_rep=False)
     return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_stream_fn(cfg: EngineConfig, mesh, axis: str,
+                       io_per_window: bool):
+    n_shards = int(mesh.shape[axis])
+    per, hper = shard_extents(cfg, n_shards)
+    lcfg = dataclasses.replace(cfg, n_slots=per, heap_slots=hper)
+    st_spec = _store_spec(axis)
+
+    def run(state, credits, stream):
+        base = jax.lax.axis_index(axis).astype(jnp.int32) * per
+
+        def step(carry, win):
+            st, cr = carry
+            batch, valid = win
+            owned = (batch.keys >= base) & (batch.keys < base + per)
+            st, cr, res, io = engine.apply_batch(
+                lcfg, st, cr, batch, valid=valid, owned=owned,
+                slot_base=base)
+            return (st, cr), (res, io)
+
+        st = dataclasses.replace(state, heap_top=state.heap_top[0])
+        (st, cr), (ress, ios) = jax.lax.scan(
+            step, (st, credits), (stream.batch, stream.valid))
+        st = dataclasses.replace(st, heap_top=st.heap_top[None])
+        if not io_per_window:
+            ios = jax.tree.map(lambda x: jnp.sum(x, axis=0), ios)
+        return (st, cr, _psum_results(ress, axis),
+                jax.tree.map(lambda x: jax.lax.psum(x, axis), ios))
+
+    fn = shard_map(run, mesh=mesh,
+                   in_specs=(st_spec, P(), P()),
+                   out_specs=(st_spec, P(), P(), P()),
+                   check_rep=False)
+    return jax.jit(fn, donate_argnums=(0, 1))
 
 
 def apply_batch_sharded(cfg: EngineConfig, mesh, state: StoreState,
@@ -141,3 +187,22 @@ def apply_batch_sharded(cfg: EngineConfig, mesh, state: StoreState,
     if valid is None:
         valid = batch.kinds != OpKind.NOP
     return _sharded_fn(cfg, mesh, axis)(state, credits, batch, valid)
+
+
+def run_windows_sharded(cfg: EngineConfig, mesh, state: StoreState,
+                        credits, stream: WindowStream, *, axis: str = "data",
+                        io_per_window: bool = False
+                        ) -> tuple[StoreState, object, Results, object]:
+    """Sharded ``repro.core.runner.run_windows``: every window of ``stream``
+    executes inside one ``lax.scan`` under one ``shard_map``.
+
+    The credit plane is replicated per window exactly as in
+    ``apply_batch_sharded`` — each scan step re-derives its ``owned`` mask
+    from that window's keys and runs the full-batch credit decision/feedback,
+    so per-window ``Results``, per-window I/O (``io_per_window=True``), the
+    credit table, and the store view are bit-identical to the single-device
+    ``run_windows`` (tested in ``tests/test_runner.py``).  ``state`` and
+    ``credits`` are donated.
+    """
+    return _sharded_stream_fn(cfg, mesh, axis, io_per_window)(
+        state, credits, stream)

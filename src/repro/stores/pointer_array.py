@@ -9,10 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import engine
+from repro.core import engine, runner
 from repro.core.credits import CreditState, credit_init
 from repro.core.types import EngineConfig, IOMetrics, OpBatch, SyncMode
 
@@ -42,6 +39,18 @@ class PointerArray:
     def apply(self, batch: OpBatch) -> tuple["PointerArray", engine.Results, IOMetrics]:
         state, credits, res, io = engine.apply_batch(
             self.cfg, self.state, self.credits, batch)
+        return dataclasses.replace(self, state=state, credits=credits), res, io
+
+    def apply_stream(self, stream: runner.WindowStream, io_per_window: bool = False
+                     ) -> tuple["PointerArray", engine.Results, IOMetrics]:
+        """Run every window of ``stream`` in one fused scan (``run_windows``).
+
+        Store/credit buffers are donated to the scan — use the returned
+        instance, not ``self``, afterwards.
+        """
+        state, credits, res, io = runner.run_windows(
+            self.cfg, self.state, self.credits, stream,
+            io_per_window=io_per_window)
         return dataclasses.replace(self, state=state, credits=credits), res, io
 
     def view(self):

@@ -23,7 +23,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core import engine
+from repro.core import engine, runner
 from repro.core.credits import CreditState, credit_init
 from repro.core.types import EngineConfig, IOMetrics, OpBatch, SyncMode
 
@@ -76,6 +76,22 @@ class SmartART:
         batch = OpBatch.make(kinds, self.slots(keys), values, n_cns=n_cns)
         state, credits, res, io = engine.apply_batch(
             self.cfg, self.state, self.credits, batch)
+        return dataclasses.replace(self, state=state, credits=credits), res, io
+
+    def apply_stream(self, kinds, keys, values, n_cns: int = 1,
+                     io_per_window: bool = False
+                     ) -> tuple["SmartART", engine.Results, IOMetrics]:
+        """Fused multi-window execution of ``(W, B)`` op arrays: keys resolve
+        through the radix path, then one ``run_windows`` scan executes every
+        window on-device.  Buffers are donated — use the returned instance.
+        """
+        kinds = jnp.asarray(kinds, jnp.int32)
+        values = jnp.asarray(values, jnp.int32)
+        stream = runner.make_stream(kinds, self.slots(keys), values,
+                                    n_cns=n_cns)
+        state, credits, res, io = runner.run_windows(
+            self.cfg, self.state, self.credits, stream,
+            io_per_window=io_per_window)
         return dataclasses.replace(self, state=state, credits=credits), res, io
 
     def view(self):

@@ -21,7 +21,7 @@ import numpy as np
 from repro.core.types import OpKind
 from repro.workloads.zipf import ZipfSampler
 
-__all__ = ["WorkloadSpec", "WORKLOADS", "generate_ops"]
+__all__ = ["WorkloadSpec", "WORKLOADS", "generate_ops", "generate_window_stream"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +55,10 @@ def generate_ops(spec: WorkloadSpec, n_ops: int, n_keys: int, n_clients: int,
                  seed: int = 0, theta: float | None = None) -> OpBatchNp:
     """Generate a flat op stream; ops are interleaved round-robin over clients
     (client c issues ops c, c+n_clients, ... — matching closed-loop clients)."""
+    df, inf = spec.delete_fraction, spec.insert_fraction
+    if df + inf > 1.0:
+        raise ValueError(
+            f"delete_fraction ({df}) + insert_fraction ({inf}) must be <= 1")
     rng = np.random.default_rng(seed + 1)
     theta = spec.theta if theta is None else theta
     zipf = ZipfSampler(n_keys, theta, seed=seed)
@@ -63,14 +67,34 @@ def generate_ops(spec: WorkloadSpec, n_ops: int, n_keys: int, n_clients: int,
     u = rng.random(n_ops)
     is_write = u < spec.write_ratio
     kinds[is_write] = OpKind.UPDATE
-    if spec.delete_fraction > 0:
-        is_del = is_write & (rng.random(n_ops) < spec.delete_fraction)
-        kinds[is_del] = OpKind.DELETE
-    if spec.insert_fraction > 0:
-        is_ins = is_write & (rng.random(n_ops) < spec.insert_fraction)
-        kinds[is_ins] = OpKind.INSERT
-        # fresh keys beyond the populated universe
-        keys = np.where(is_ins, rng.integers(n_keys, 2 * n_keys, n_ops), keys)
+    if df > 0 or inf > 0:
+        # ONE draw partitions the write fraction disjointly:
+        # [0, df) -> DELETE, [df, df+inf) -> INSERT, the rest stay UPDATE.
+        v = rng.random(n_ops)
+        kinds[is_write & (v < df)] = OpKind.DELETE
+        is_ins = is_write & (v >= df) & (v < df + inf)
+        if inf > 0:
+            kinds[is_ins] = OpKind.INSERT
+            # fresh keys beyond the populated universe
+            keys = np.where(is_ins, rng.integers(n_keys, 2 * n_keys, n_ops),
+                            keys)
     values = rng.integers(1, 2**31 - 1, size=n_ops, dtype=np.int64)
     clients = (np.arange(n_ops) % n_clients).astype(np.int32)
     return OpBatchNp(kinds=kinds, keys=keys, values=values, clients=clients)
+
+
+def generate_window_stream(spec: WorkloadSpec, windows: int, n_ops: int,
+                           n_keys: int, n_clients: int, seed: int = 0,
+                           theta: float | None = None) -> OpBatchNp:
+    """Generate ``windows`` stacked synchronization windows, arrays ``(W, n_ops)``.
+
+    Window ``w`` is exactly ``generate_ops(spec, n_ops, ..., seed=seed + w)``,
+    so a stream fed to ``repro.core.runner.run_windows`` replays the batches a
+    per-window loop over ``generate_ops`` would have produced.
+    """
+    wins = [generate_ops(spec, n_ops, n_keys, n_clients, seed=seed + w,
+                         theta=theta) for w in range(windows)]
+    return OpBatchNp(kinds=np.stack([o.kinds for o in wins]),
+                     keys=np.stack([o.keys for o in wins]),
+                     values=np.stack([o.values for o in wins]),
+                     clients=np.stack([o.clients for o in wins]))

@@ -1,0 +1,171 @@
+"""Fused multi-window runner equivalence: ``run_windows`` (one jitted scan)
+must be bit-identical, window by window, to the per-window Python loop over
+``apply_batch`` — Results, I/O bill, credit table, and store view — for all
+four SyncModes, unsharded and under ``dist.store.run_windows_sharded`` on a
+multi-way CPU mesh.  Plus the MN-IOPS throughput model and the stacked-window
+stream generator."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import runner
+from repro.core.credits import credit_init
+from repro.core.engine import apply_batch, populate, store_init, store_view
+from repro.core.simnet import SimParams
+from repro.core.types import (EngineConfig, IOMetrics, OpBatch, OpKind,
+                              SyncMode)
+from repro.dist import store as dstore
+from repro.launch.mesh import make_local_mesh
+from repro.workloads.ycsb import WORKLOADS, generate_ops, generate_window_stream
+
+MODES = [SyncMode.OSYNC, SyncMode.SPIN, SyncMode.MCS, SyncMode.CIDER]
+W, B, N_SLOTS, HEAP, N_CNS = 4, 256, 64, 1024, 4
+
+
+def _ops():
+    """(W, B) op arrays with a strided cross-CN hot key so CIDER's credits
+    warm up and the pessimistic global-WC path actually runs (see
+    tests/test_dist_store.py for why striding matters)."""
+    rng = np.random.default_rng(0)
+    kinds = rng.choice(
+        [OpKind.SEARCH, OpKind.INSERT, OpKind.UPDATE, OpKind.DELETE],
+        size=(W, B), p=(0.3, 0.15, 0.4, 0.15)).astype(np.int32)
+    keys = rng.integers(0, N_SLOTS, (W, B)).astype(np.int32)
+    values = rng.integers(0, 10_000, (W, B)).astype(np.int32)
+    keys[:, ::4] = 5
+    kinds[:, ::4] = OpKind.UPDATE
+    return kinds, keys, values
+
+
+def _init(cfg):
+    rng = np.random.default_rng(1)
+    pop_keys = rng.choice(N_SLOTS, size=N_SLOTS // 2, replace=False)
+    pop_vals = rng.integers(0, 10_000, pop_keys.shape[0])
+    return (populate(cfg, store_init(cfg), pop_keys, pop_vals),
+            credit_init(256), pop_keys, pop_vals)
+
+
+def _loop(cfg, state, credits, kinds, keys, values):
+    """The reference per-window Python loop the runner replaces."""
+    ress, ios = [], []
+    for w in range(W):
+        batch = OpBatch.make(kinds[w], keys[w], values[w], n_cns=N_CNS)
+        state, credits, res, io = apply_batch(cfg, state, credits, batch)
+        ress.append(res)
+        ios.append(io)
+    return state, credits, ress, ios
+
+
+def _assert_windows_equal(ress, ios, res2, ios2, cr1, cr2):
+    for w in range(W):
+        for f in dataclasses.fields(ress[w]):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(ress[w], f.name)),
+                np.asarray(getattr(res2, f.name))[w],
+                err_msg=f"window {w} Results.{f.name}")
+        for f in dataclasses.fields(IOMetrics):
+            assert (int(getattr(ios[w], f.name))
+                    == int(np.asarray(getattr(ios2, f.name))[w])), \
+                f"window {w} IOMetrics.{f.name}"
+    np.testing.assert_array_equal(np.asarray(cr1.credit),
+                                  np.asarray(cr2.credit))
+    np.testing.assert_array_equal(np.asarray(cr1.retry_record),
+                                  np.asarray(cr2.retry_record))
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_run_windows_matches_python_loop(mode):
+    kinds, keys, values = _ops()
+    cfg = EngineConfig(n_slots=N_SLOTS, heap_slots=HEAP, mode=mode)
+    st0, cr0, _, _ = _init(cfg)
+    st1, cr1, ress, ios = _loop(cfg, st0, cr0, kinds, keys, values)
+
+    st0, cr0, _, _ = _init(cfg)   # fresh buffers: run_windows donates its args
+    stream = runner.make_stream(kinds, keys, values, n_cns=N_CNS)
+    st2, cr2, res2, ios2 = runner.run_windows(cfg, st0, cr0, stream,
+                                              io_per_window=True)
+    _assert_windows_equal(ress, ios, res2, ios2, cr1, cr2)
+    ex1, v1 = store_view(st1)
+    ex2, v2 = store_view(st2)
+    np.testing.assert_array_equal(np.asarray(ex1), np.asarray(ex2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+    np.testing.assert_array_equal(np.asarray(st1.ver), np.asarray(st2.ver))
+    np.testing.assert_array_equal(np.asarray(st1.epoch), np.asarray(st2.epoch))
+    if mode == SyncMode.CIDER:
+        assert int(np.asarray(res2.pessimistic).sum()) > 0
+
+    # the default (summed) bill is the sum of the per-window bills
+    st0, cr0, _, _ = _init(cfg)
+    _, _, _, io_sum = runner.run_windows(cfg, st0, cr0, stream)
+    for f in dataclasses.fields(IOMetrics):
+        assert int(getattr(io_sum, f.name)) == sum(
+            int(getattr(io, f.name)) for io in ios), f"summed {f.name}"
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_run_windows_sharded_matches_python_loop(mode):
+    mesh = make_local_mesh(data=4)   # conftest pins 8 host devices
+    kinds, keys, values = _ops()
+    cfg = EngineConfig(n_slots=N_SLOTS, heap_slots=HEAP, mode=mode)
+    st0, cr0, pop_keys, pop_vals = _init(cfg)
+    st1, cr1, ress, ios = _loop(cfg, st0, cr0, kinds, keys, values)
+
+    sst = dstore.sharded_populate(
+        cfg, 4, dstore.sharded_store_init(cfg, 4), pop_keys, pop_vals)
+    stream = runner.make_stream(kinds, keys, values, n_cns=N_CNS)
+    st2, cr2, res2, ios2 = dstore.run_windows_sharded(
+        cfg, mesh, sst, credit_init(256), stream, io_per_window=True)
+    _assert_windows_equal(ress, ios, res2, ios2, cr1, cr2)
+    ex1, v1 = store_view(st1)
+    ex2, v2 = dstore.sharded_store_view(cfg, 4, st2)
+    np.testing.assert_array_equal(np.asarray(ex1), np.asarray(ex2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+
+def test_make_stream_matches_opbatch_make():
+    kinds, keys, values = _ops()
+    stream = runner.make_stream(kinds, keys, values, n_cns=N_CNS)
+    for w in range(W):
+        ref = OpBatch.make(kinds[w], keys[w], values[w], n_cns=N_CNS)
+        for f in dataclasses.fields(OpBatch):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(stream.batch, f.name))[w],
+                np.asarray(getattr(ref, f.name)), err_msg=f.name)
+    assert stream.shape == (W, B)
+
+
+def test_generate_window_stream_replays_per_window_seeds():
+    spec = WORKLOADS["write-intensive"]
+    ops = generate_window_stream(spec, 3, 128, 512, 16, seed=7)
+    assert ops.kinds.shape == (3, 128)
+    for w in range(3):
+        ref = generate_ops(spec, 128, 512, 16, seed=7 + w)
+        np.testing.assert_array_equal(ops.kinds[w], ref.kinds)
+        np.testing.assert_array_equal(ops.keys[w], ref.keys)
+        np.testing.assert_array_equal(ops.values[w], ref.values)
+
+
+def test_modeled_throughput_iops_and_bandwidth_bounds():
+    p = SimParams()
+    z = jnp.zeros((), jnp.int32)
+    io = IOMetrics(reads=jnp.int32(3200), writes=z, cas=z, faa=z, cn_msgs=z,
+                   mn_bytes=jnp.int32(100), retries=z, combined=z, executed=z)
+    m = runner.modeled_throughput(io, p, n_ops=1000)
+    # 3200 verbs / 32 per us = 100 us -> 10 ops/us = 10 Mops/s, IOPS-bound
+    assert m["bound"] == "iops"
+    assert m["modeled_ticks_us"] == pytest.approx(100.0)
+    assert m["modeled_mops"] == pytest.approx(10.0)
+    io_bw = dataclasses.replace(io, reads=jnp.int32(1),
+                                mn_bytes=jnp.int32(2_500_000))
+    m2 = runner.modeled_throughput(io_bw, p, n_ops=1000)
+    assert m2["bound"] == "bandwidth"          # 2.5MB / 12500 B/us = 200 us
+    assert m2["modeled_ticks_us"] == pytest.approx(200.0)
+    # fewer MN verbs for the same ops => strictly higher modeled throughput
+    io_less = dataclasses.replace(io, reads=jnp.int32(1600))
+    assert (runner.modeled_throughput(io_less, p, 1000)["modeled_mops"]
+            > m["modeled_mops"])

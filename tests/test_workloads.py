@@ -3,6 +3,7 @@ pmf (chi-square), skew ordering, and determinism of the jittable path."""
 from __future__ import annotations
 
 import numpy as np
+import pytest
 
 import jax
 import jax.numpy as jnp
@@ -67,3 +68,36 @@ def test_scramble_scatters_hot_ranks():
     assert np.unique(ids).size == 16                     # no collisions here
     np.testing.assert_array_equal(ids, scramble(ranks, n))
     assert ids.max() - ids.min() > n // 8                # scattered, not adjacent
+
+
+def test_generate_ops_write_partition_is_disjoint():
+    """delete/insert/update partition the write fraction DISJOINTLY: with
+    both fractions > 0 the delivered mix must match write_ratio * fraction
+    (the old independent-mask draw let INSERT overwrite DELETE kinds)."""
+    from repro.core.types import OpKind
+    from repro.workloads.ycsb import WorkloadSpec, generate_ops
+
+    n = 200_000
+    spec = WorkloadSpec("mix", write_ratio=0.6, read_ratio=0.4,
+                        delete_fraction=0.3, insert_fraction=0.2)
+    ops = generate_ops(spec, n, 10_000, 8, seed=3)
+    frac = {k: float(np.mean(ops.kinds == k))
+            for k in (OpKind.SEARCH, OpKind.INSERT, OpKind.UPDATE,
+                      OpKind.DELETE)}
+    assert frac[OpKind.SEARCH] == pytest.approx(0.4, abs=0.01)
+    assert frac[OpKind.DELETE] == pytest.approx(0.6 * 0.3, abs=0.01)
+    assert frac[OpKind.INSERT] == pytest.approx(0.6 * 0.2, abs=0.01)
+    assert frac[OpKind.UPDATE] == pytest.approx(0.6 * 0.5, abs=0.01)
+    # INSERTs draw fresh keys beyond the populated universe; nobody else does
+    ins = ops.kinds == OpKind.INSERT
+    assert (ops.keys[ins] >= 10_000).all()
+    assert (ops.keys[~ins] < 10_000).all()
+
+
+def test_generate_ops_rejects_overfull_partition():
+    from repro.workloads.ycsb import WorkloadSpec, generate_ops
+
+    spec = WorkloadSpec("bad", write_ratio=1.0, read_ratio=0.0,
+                        delete_fraction=0.7, insert_fraction=0.7)
+    with pytest.raises(ValueError, match="must be <= 1"):
+        generate_ops(spec, 10, 100, 1)
