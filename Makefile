@@ -1,23 +1,35 @@
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test test-fast bench-smoke lint
+.PHONY: test test-fast bench-smoke bench-scenarios-smoke check-regression lint
 
 # tier-1 verify (ROADMAP.md)
 test:
 	python -m pytest -x -q
 
-# quick signal: engine + runner + dist + stores + workloads only
+# quick signal: engine + runner + dist + stores + workloads + the Pallas
+# wc_combine kernel that mirrors the engine's combine contract
 test-fast:
 	python -m pytest -x -q tests/test_engine.py tests/test_runner.py \
 	    tests/test_dist.py tests/test_dist_store.py tests/test_stores.py \
-	    tests/test_workloads.py
+	    tests/test_workloads.py tests/test_dynamic.py tests/test_kernels.py
 
 # tiny engine benchmark on the fused runner -> BENCH_engine.fast.json
 # (the committed full-size baseline BENCH_engine.json is regenerated with
 #  `python -m benchmarks.run --only engine_json`, no --fast)
 bench-smoke:
 	python -m benchmarks.run --only engine_json --fast
+
+# dynamic-contention scenario matrix -> BENCH_scenarios.fast.json
+# (committed full-size baseline: `python -m benchmarks.scenarios`, no --fast)
+bench-scenarios-smoke:
+	python -m benchmarks.scenarios --fast
+
+# perf-regression gate over the two fast JSONs (CI fails on >10% CIDER
+# modeled-mops drop or on CIDER losing the paper's mode ordering); depends
+# on the smoke targets so it never gates against stale JSONs
+check-regression: bench-smoke bench-scenarios-smoke
+	python -m benchmarks.check_regression
 
 lint:
 	@command -v ruff >/dev/null 2>&1 \

@@ -1,0 +1,130 @@
+"""CI perf-regression gate over the ``--fast`` benchmark JSONs.
+
+Before this gate, CI merely uploaded ``BENCH_engine.fast.json`` as an
+artifact — a change that re-inverted the benchmark (the exact failure PR 2
+fixed) would merge green.  Now CI fails when either
+
+* CIDER's ``modeled_mops`` drops more than ``--tolerance`` (default 10%)
+  below the committed baseline (``benchmarks/baselines.json``), in the
+  engine benchmark or in any dynamic-contention scenario, or
+* CIDER stops *leading* OSYNC/MCS/SPIN on ``modeled_mops`` anywhere — the
+  paper's headline ordering (§5).
+
+``modeled_mops`` is derived from the exact metered verb bill of seeded
+streams, so it is bit-deterministic across machines — the baselines are
+exact values with a tolerance band, not flaky wall-clock numbers.
+
+    PYTHONPATH=src python -m benchmarks.check_regression
+    PYTHONPATH=src python -m benchmarks.check_regression --update-baseline
+
+Run ``make bench-smoke bench-scenarios-smoke`` first (CI does); use
+``--update-baseline`` after an intentional perf change to rewrite
+``benchmarks/baselines.json`` from the current fast JSONs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+MODES = ["OSYNC", "SPIN", "MCS", "CIDER"]
+BASELINES = ["OSYNC", "SPIN", "MCS"]
+HERE = os.path.dirname(os.path.abspath(__file__))
+DEFAULT_BASELINE = os.path.join(HERE, "baselines.json")
+
+
+def _load(path: str, what: str) -> dict:
+    if not os.path.exists(path):
+        raise SystemExit(
+            f"missing {what} {path!r} — run `make bench-smoke "
+            f"bench-scenarios-smoke` first")
+    with open(path) as f:
+        return json.load(f)
+
+
+def _collect(engine: dict, scenarios: dict) -> dict:
+    """{check_name: {mode: modeled_mops}} for every gated benchmark."""
+    out = {"engine": {m: engine[m]["modeled_mops"] for m in MODES}}
+    for name, topos in scenarios["scenarios"].items():
+        for topo, recs in topos.items():
+            out[f"scenario/{name}/{topo}"] = {
+                m: recs[m]["modeled_mops"] for m in MODES}
+    return out
+
+
+def check(actual: dict, baseline: dict, tolerance: float) -> list[str]:
+    failures = []
+    # a baselined benchmark that disappears from the JSONs is a gate bypass,
+    # not a pass — fail loudly
+    for name in baseline:
+        if not name.startswith("_") and name not in actual:
+            failures.append(
+                f"{name}: committed baseline has no matching benchmark in "
+                f"the fast JSONs — benchmark removed or harness regressed")
+    for name, modes in actual.items():
+        cider = modes["CIDER"]
+        for rival in BASELINES:
+            if cider < modes[rival]:
+                failures.append(
+                    f"{name}: CIDER no longer leads {rival} on modeled_mops "
+                    f"({cider:.4f} < {modes[rival]:.4f})")
+        want = baseline.get(name, {}).get("CIDER")
+        if want is None:
+            failures.append(f"{name}: no committed baseline for CIDER — "
+                            f"run --update-baseline")
+        elif cider < want * (1.0 - tolerance):
+            failures.append(
+                f"{name}: CIDER modeled_mops regressed "
+                f"{(1 - cider / want) * 100:.1f}% "
+                f"({cider:.4f} < {want:.4f} - {tolerance:.0%})")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", default="BENCH_engine.fast.json")
+    ap.add_argument("--scenarios", default="BENCH_scenarios.fast.json")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="allowed fractional drop of CIDER modeled_mops")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline file from the current JSONs")
+    args = ap.parse_args()
+
+    engine = _load(args.engine, "engine benchmark")
+    scenarios = _load(args.scenarios, "scenario benchmark")
+    actual = _collect(engine, scenarios)
+
+    if args.update_baseline:
+        payload = {
+            "_comment": "CIDER modeled_mops floors for the --fast benchmark "
+                        "configs; exact-verb-bill metrics, deterministic "
+                        "given the generator seeds.  Regenerate with "
+                        "`python -m benchmarks.check_regression "
+                        "--update-baseline` after an intentional change.",
+            **{name: {"CIDER": modes["CIDER"]}
+               for name, modes in actual.items()},
+        }
+        with open(args.baseline, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"baseline rewritten -> {args.baseline} "
+              f"({len(actual)} checks)")
+        return
+
+    baseline = _load(args.baseline, "committed baseline")
+    failures = check(actual, baseline, args.tolerance)
+    if failures:
+        print(f"PERF REGRESSION GATE: {len(failures)} failure(s)")
+        for msg in failures:
+            print(f"  FAIL {msg}")
+        sys.exit(1)
+    print(f"perf gate OK: {len(actual)} checks, CIDER leads everywhere and "
+          f"is within {args.tolerance:.0%} of baseline")
+    for name, modes in sorted(actual.items()):
+        print(f"  {name}: CIDER={modes['CIDER']:.4f} "
+              f"(baseline {baseline[name]['CIDER']:.4f})")
+
+
+if __name__ == "__main__":
+    main()

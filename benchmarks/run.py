@@ -218,7 +218,11 @@ def bench_engine_json(fast=False, path=None):
       (``wall_s`` / ``throughput_mops``) — a dispatch-free regression signal;
     * ``modeled_mops`` — throughput under the MN-IOPS cost model
       (``runner.modeled_throughput``), the paper's §2.3/§5 bottleneck metric,
-      computed from the exact verb bill summed over all windows.
+      computed from the exact verb bill summed over all windows;
+    * ``modeled_p50_us`` / ``modeled_p99_us`` — the paper's second axis:
+      per-op modeled latency percentiles (``runner.modeled_latency``) from
+      each op's verb chain + wait-queue rank + MN NIC queueing under the
+      same ``SimParams`` cost model.
 
     ``--fast`` writes ``BENCH_engine.fast.json`` and refuses to overwrite the
     committed full-size baseline.
@@ -252,6 +256,10 @@ def bench_engine_json(fast=False, path=None):
             "modeled_mops": "ops / max(mn_iops/mn_cap, mn_bytes/mn_bw) us — "
                             "MN-NIC-bound throughput, the paper's metric "
                             "(PAPER.md §2.3, §5)",
+            "modeled_p50_us/p99_us": "per-op modeled latency percentiles: "
+                                     "critical-path RTTs + MN NIC queueing "
+                                     "under SimParams (runner."
+                                     "modeled_latency, DESIGN.md §7)",
             "mn_cap_per_us": p.mn_cap, "mn_bw_bytes_per_us": p.mn_bw,
         },
     }
@@ -272,6 +280,9 @@ def bench_engine_json(fast=False, path=None):
         d["throughput_mops"] = round(windows * b / dt / 1e6, 4)
         d["wall_s"] = round(dt, 4)
         d.update(runner.modeled_throughput(io, p, n_ops=windows * b))
+        lat = runner.modeled_latency(pa.cfg, ops.kinds, res, p)
+        d.update({f"modeled_{k}": v
+                  for k, v in runner.latency_stats(lat).as_dict().items()})
         out[mode.name] = d
     with open(path, "w") as f:
         json.dump(out, f, indent=1)
@@ -279,9 +290,10 @@ def bench_engine_json(fast=False, path=None):
     for m in MODES:
         d = out[m.name]
         print(f"{m.name:6s} modeled={d['modeled_mops']:8.3f} Mops/s "
+              f"p50={d['modeled_p50_us']:7.1f}us "
+              f"p99={d['modeled_p99_us']:8.1f}us "
               f"wall={d['throughput_mops']:8.3f} Mops/s "
-              f"mn_iops={d['mn_iops']:8d} writes={d['writes']:6d} "
-              f"cas={d['cas']:7d} combined={d['combined']:6d}")
+              f"mn_iops={d['mn_iops']:8d} combined={d['combined']:6d}")
     return out
 
 

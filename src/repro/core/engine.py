@@ -79,6 +79,9 @@ class Results:
     combined: jax.Array     # (B,) bool — write combined away by WC
     wc_batch: jax.Array     # (B,) int32 — wait-queue length at execution
     retries: jax.Array      # (B,) int32 — CAS retries (optimistic path ops)
+    rank: jax.Array         # (B,) int32 — wait-queue rank at execution
+                            # (0 = queue head / uncontended); feeds the
+                            # modeled-latency derivation (runner.modeled_latency)
 
 
 def store_init(cfg: EngineConfig) -> StoreState:
@@ -307,6 +310,7 @@ def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
     per_op_retries = jnp.zeros((b,), jnp.int32)
     per_op_combined = jnp.zeros((b,), bool)
     per_op_batch = jnp.ones((b,), jnp.int32)
+    per_op_rank = jnp.zeros((b,), jnp.int32)
 
     # INSERTs: optimistic CAS on the empty pointer in every mode (§4.2.2);
     # concurrent same-key INSERTs: exactly one wins, losers fail once.
@@ -340,6 +344,7 @@ def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
                  + (s(opt_queue) + plan_o.retry_sum) * cfg.ptr_bytes)
     combined_total += s(opt_upd) - m_opt_writes      # local-WC combined
     per_op_retries = jnp.where(opt_queue, plan_o.rank_of, per_op_retries)
+    per_op_rank = jnp.where(opt_queue, plan_o.rank_of, per_op_rank)
     per_op_combined = per_op_combined | (opt_upd & ~loc_exec_opt)
 
     # pessimistic subset
@@ -353,6 +358,7 @@ def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
         retries_total += polls_sum
         mn_bytes += m_pe * (cfg.value_bytes + 3 * cfg.ptr_bytes) + polls_sum * cfg.ptr_bytes
         per_op_retries = jnp.where(loc_exec_pess, polls, per_op_retries)
+        per_op_rank = jnp.where(loc_exec_pess, plan_p.rank_of, per_op_rank)
     elif cfg.mode == SyncMode.MCS:
         writes += m_pe
         cas += 2 * m_pe                              # enqueue masked-CAS + ptr CAS
@@ -361,6 +367,7 @@ def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
         cn_msgs += 2 * s(jnp.where(loc_exec_pess, (plan_p.mult_of > 1), 0))
         mn_bytes += m_pe * (cfg.value_bytes + 2 * cfg.ptr_bytes + 8)
         per_op_batch = jnp.where(loc_exec_pess, 1, per_op_batch)
+        per_op_rank = jnp.where(loc_exec_pess, plan_p.rank_of, per_op_rank)
     elif cfg.mode == SyncMode.CIDER:
         # global WC: all queued writers on a key collapse to ONE executed write
         plan_p = wc.per_key_stats(keys, pos, loc_exec_pess)
@@ -379,6 +386,7 @@ def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
         combined_total += s(pess) - n_q
         per_op_combined = per_op_combined | (pess & ~is_exec)
         per_op_batch = jnp.where(loc_exec_pess, plan_p.mult_of, per_op_batch)
+        per_op_rank = jnp.where(loc_exec_pess, plan_p.rank_of, per_op_rank)
 
     executed = writes
 
@@ -425,7 +433,7 @@ def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
     value = jnp.full((b,), _NONE, jnp.int32).at[perm].set(val_s)
     res = Results(ok=ok, value=value, pessimistic=pess,
                   combined=per_op_combined, wc_batch=per_op_batch,
-                  retries=per_op_retries)
+                  retries=per_op_retries, rank=per_op_rank)
     io = IOMetrics(reads=reads, writes=writes, cas=cas, faa=faa,
                    cn_msgs=cn_msgs, mn_bytes=mn_bytes, retries=retries_total,
                    combined=combined_total, executed=executed)

@@ -17,6 +17,19 @@ Two throughput metrics (see DESIGN.md §6):
   *exactly* per window.  ``modeled_throughput`` converts the verb bill into
   ops/s under the testbed cost model (``SimParams``: ``mn_cap`` verbs/us,
   ``mn_bw`` bytes/us), the same accounting FUSEE/Outback evaluate with.
+
+Modeled latency (the paper's second axis, Figs 11-12): ``modeled_latency``
+derives a per-op completion time in microseconds from each op's exact verb
+bill and wait-queue rank (``Results.rank``) under the same ``SimParams``
+cost model the protocol simulator uses — critical-path RTTs per protocol
+workflow (Figs 9-10) plus the memory-side NIC queueing delay of the window's
+own verb backlog (``simnet.issue_mn``'s ``(backlog + rank) / cap`` rule).
+``latency_stats`` reduces that to p50/p99 (``LatencyStats``); see
+DESIGN.md §7 for the per-mode chains.
+
+``run_windows_traced`` additionally returns the per-window credit-table mass
+so CIDER's AIMD adaptation (§4.3) is observable as a trajectory without
+leaving the fused scan.
 """
 from __future__ import annotations
 
@@ -32,10 +45,12 @@ from repro.core import engine
 from repro.core.credits import CreditState
 from repro.core.engine import Results, StoreState
 from repro.core.simnet import SimParams
-from repro.core.types import EngineConfig, IOMetrics, OpBatch, OpKind
+from repro.core.types import (EngineConfig, IOMetrics, LatencyStats, OpBatch,
+                              OpKind, SyncMode)
 
-__all__ = ["WindowStream", "make_stream", "run_windows", "io_window",
-           "modeled_throughput"]
+__all__ = ["WindowStream", "make_stream", "run_windows", "run_windows_traced",
+           "io_window", "modeled_throughput", "modeled_latency",
+           "latency_stats"]
 
 
 @jax.tree_util.register_dataclass
@@ -74,8 +89,29 @@ def make_stream(kinds, keys, values, n_cns: int = 1,
     return WindowStream(batch=batch, valid=jnp.asarray(valid, bool))
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "io_per_window"),
+@functools.partial(jax.jit, static_argnames=("cfg", "io_per_window", "traced"),
                    donate_argnums=(1, 2))
+def _scan_windows(cfg: EngineConfig, state: StoreState, credits: CreditState,
+                  stream: WindowStream, io_per_window: bool, traced: bool):
+    """The one fused window scan behind ``run_windows``/``run_windows_traced``
+    (and mirrored by ``dist.store``'s sharded variant)."""
+    def step(carry, win):
+        st, cr = carry
+        batch, valid = win
+        st, cr, res, io = engine.apply_batch(cfg, st, cr, batch, valid=valid)
+        out = (res, io, jnp.sum(cr.credit)) if traced else (res, io)
+        return (st, cr), out
+
+    (state, credits), outs = jax.lax.scan(
+        step, (state, credits), (stream.batch, stream.valid))
+    results, ios = outs[0], outs[1]
+    if not io_per_window:
+        ios = jax.tree.map(lambda x: jnp.sum(x, axis=0), ios)
+    if traced:
+        return state, credits, results, ios, outs[2]
+    return state, credits, results, ios
+
+
 def run_windows(cfg: EngineConfig, state: StoreState, credits: CreditState,
                 stream: WindowStream, io_per_window: bool = False,
                 ) -> tuple[StoreState, CreditState, Results, IOMetrics]:
@@ -90,17 +126,21 @@ def run_windows(cfg: EngineConfig, state: StoreState, credits: CreditState,
     the window axis and ``io`` summed across windows (``io_per_window=True``
     keeps the per-window bill, leaves shaped ``(W,)``).
     """
-    def step(carry, win):
-        st, cr = carry
-        batch, valid = win
-        st, cr, res, io = engine.apply_batch(cfg, st, cr, batch, valid=valid)
-        return (st, cr), (res, io)
+    return _scan_windows(cfg, state, credits, stream, io_per_window, False)
 
-    (state, credits), (results, ios) = jax.lax.scan(
-        step, (state, credits), (stream.batch, stream.valid))
-    if not io_per_window:
-        ios = jax.tree.map(lambda x: jnp.sum(x, axis=0), ios)
-    return state, credits, results, ios
+
+def run_windows_traced(cfg: EngineConfig, state: StoreState,
+                       credits: CreditState, stream: WindowStream,
+                       ) -> tuple[StoreState, CreditState, Results, IOMetrics,
+                                  jax.Array]:
+    """``run_windows`` with the AIMD trajectory kept: returns
+    ``(state, credits, results, io, credit_mass)`` where ``io`` is always
+    per-window (leaves ``(W,)``) and ``credit_mass`` is the total credit-table
+    mass AFTER each window (``(W,)`` int32) — the §4.3 adaptation signal the
+    dynamic-contention scenarios plot.  Same bit-exact per-window semantics
+    and donation contract as ``run_windows``.
+    """
+    return _scan_windows(cfg, state, credits, stream, True, True)
 
 
 def io_window(ios: IOMetrics, w: int) -> IOMetrics:
@@ -130,3 +170,110 @@ def modeled_throughput(io: IOMetrics, p: SimParams, n_ops: int
         "mn_cap_per_us": p.mn_cap,
         "mn_bw_bytes_per_us": p.mn_bw,
     }
+
+
+def modeled_latency(cfg: EngineConfig, kinds, res: Results, p: SimParams,
+                    valid=None) -> np.ndarray:
+    """Per-op modeled completion time in microseconds (host-side, numpy).
+
+    Two additive components, mirroring ``repro.core.simnet``'s service model
+    (DESIGN.md §7 tabulates the per-mode chains):
+
+    * **critical-path RTTs** — the op's sequential verb chain per the
+      protocol workflows (Figs 9-10), scaled by ``p.rtt``; queue waits enter
+      through ``Results.rank``: a rank-r optimistic writer pays r failed
+      CAS rounds, a rank-r SPIN/MCS waiter sits behind r lock holders, while
+      a CIDER combined queue completes with its single executor *regardless
+      of rank* — exactly why global WC flattens the tail.
+    * **MN NIC queueing** — ``simnet.issue_mn``'s ``(backlog + rank) / cap``
+      rule applied to the window's own arrivals: each op waits behind the MN
+      verbs of the ops preceding it in the window (serialization order ==
+      batch position), so retry storms inflate everyone's tail, not just the
+      retrying op's.
+
+    Aggregate ``IOMetrics`` stay the *exact* bill; this per-op split is the
+    documented approximation (locally-combined baseline writers are billed
+    as rank-0 writers, CN<->CN hops cost ``p.cn_rtt`` uncontended).  Works
+    on flat ``(B,)`` or window-stacked ``(W, B)`` results; invalid lanes are
+    NaN (``latency_stats`` ignores them).
+    """
+    kinds = np.asarray(kinds)
+    ok = np.asarray(res.ok)
+    pess = np.asarray(res.pessimistic)
+    comb = np.asarray(res.combined)
+    rank = np.asarray(res.rank).astype(np.float64)
+    polls = np.asarray(res.retries).astype(np.float64)
+    m = np.asarray(res.wc_batch).astype(np.float64)
+    if valid is None:
+        valid = kinds != OpKind.NOP
+    else:
+        valid = np.asarray(valid) & (kinds != OpKind.NOP)
+    search = kinds == OpKind.SEARCH
+    insert = kinds == OpKind.INSERT
+    update = kinds == OpKind.UPDATE
+    delete = kinds == OpKind.DELETE
+    idx = float(cfg.index_read_iops)
+    rtt, cnr = float(p.rtt), float(p.cn_rtt)
+
+    # ---- critical-path chain: sequential MN RTTs + CN-msg hops (us) --------
+    chain = np.full(kinds.shape, idx, np.float64)      # index resolve
+    extra = np.zeros(kinds.shape, np.float64)          # CN<->CN hops (us)
+    chain = np.where(search, idx + ok, chain)          # + value READ if found
+    chain = np.where(insert, idx + 2.0, chain)         # heap WRITE + ptr CAS
+    # optimistic writers: rank-r loses r CAS rounds (re-read + re-CAS each)
+    opt_u = update & ~pess
+    chain = np.where(opt_u & ~comb, idx + 2.0 + 2.0 * rank, chain)
+    chain = np.where(opt_u & comb, idx + 2.0, chain)   # rides its executor
+    if cfg.mode == SyncMode.OSYNC:
+        chain = np.where(delete, idx + 1.0 + 2.0 * rank, chain)
+    else:
+        chain = np.where(delete, idx + 3.0, chain)     # lock CAS+CAS+FAA
+    if cfg.mode == SyncMode.SPIN:
+        # acquire CAS + r holders (WRITE + ptr CAS + unlock each) + own 3
+        chain = np.where(update & pess, idx + 4.0 + 3.0 * rank, chain)
+    elif cfg.mode == SyncMode.MCS:
+        # enqueue CAS + own WRITE + ptr CAS + FAA; each predecessor serves
+        # 3 RTTs then hands off with one CN msg
+        chain = np.where(update & pess, idx + 4.0, chain)
+        extra = np.where(update & pess, rank * (3.0 * rtt + cnr), extra)
+    elif cfg.mode == SyncMode.CIDER:
+        # the whole queue completes with its ONE executor: enqueue CAS +
+        # coordinator tail READ (multi-writer queues) + combined WRITE +
+        # ptr CAS + release FAA — rank does NOT appear (global WC, §4.2)
+        chain = np.where(update & pess, idx + 4.0 + (m > 1), chain)
+        extra = np.where(update & pess & (m > 1), 2.0 * cnr, extra)
+
+    # ---- MN NIC queueing: wait behind earlier ops' verbs in the window ----
+    verbs = np.full(kinds.shape, idx, np.float64)
+    verbs = np.where(search, idx + ok, verbs)
+    verbs = np.where(insert, idx + 2.0, verbs)
+    verbs = np.where(opt_u & ~comb, idx + 2.0 + 2.0 * rank, verbs)
+    if cfg.mode == SyncMode.OSYNC:
+        verbs = np.where(delete, idx + 1.0 + 2.0 * rank, verbs)
+    else:
+        verbs = np.where(delete, idx + 3.0, verbs)
+    if cfg.mode == SyncMode.SPIN:
+        verbs = np.where(update & pess, idx + 4.0 + polls, verbs)
+    elif cfg.mode == SyncMode.MCS:
+        verbs = np.where(update & pess, idx + 4.0, verbs)
+    elif cfg.mode == SyncMode.CIDER:
+        verbs = np.where(update & pess & comb, idx + 2.0, verbs)   # CAS + FAA
+        verbs = np.where(update & pess & ~comb, idx + 4.0 + (m > 1), verbs)
+    verbs = np.where(valid, verbs, 0.0)
+    backlog = np.cumsum(verbs, axis=-1) - verbs
+    lat = rtt * chain + extra + backlog / float(p.mn_cap)
+    return np.where(valid, lat, np.nan)
+
+
+def latency_stats(lat_us: np.ndarray) -> LatencyStats:
+    """Reduce ``modeled_latency`` output to the paper's percentiles."""
+    lat = np.asarray(lat_us, np.float64).ravel()
+    lat = lat[~np.isnan(lat)]
+    if lat.size == 0:
+        return LatencyStats(0.0, 0.0, 0.0, 0.0, 0)
+    return LatencyStats(
+        p50_us=round(float(np.percentile(lat, 50)), 2),
+        p99_us=round(float(np.percentile(lat, 99)), 2),
+        mean_us=round(float(lat.mean()), 2),
+        max_us=round(float(lat.max()), 2),
+        n_ops=int(lat.size))

@@ -18,8 +18,8 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = [
-    "OpKind", "Verb", "SyncMode", "IOMetrics", "EngineConfig", "OpBatch",
-    "NULL_PTR", "io_zeros", "io_add",
+    "OpKind", "Verb", "SyncMode", "IOMetrics", "LatencyStats", "EngineConfig",
+    "OpBatch", "NULL_PTR", "io_zeros", "io_add",
 ]
 
 # A null data pointer (empty slot). Pointers are int32 heap indices >= 0.
@@ -75,6 +75,22 @@ class IOMetrics:
              for f in dataclasses.fields(self)}
         d["mn_iops"] = d["reads"] + d["writes"] + d["cas"] + d["faa"]
         return d
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyStats:
+    """Modeled per-op latency percentiles (microseconds) — the paper's second
+    evaluation axis next to throughput (Figs 11-12, 16-19).  Produced by
+    ``repro.core.runner.modeled_latency`` / ``latency_stats`` from each op's
+    exact verb bill and wait-queue rank under the ``SimParams`` cost model."""
+    p50_us: float
+    p99_us: float
+    mean_us: float
+    max_us: float
+    n_ops: int
+
+    def as_dict(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
 
 
 def io_zeros() -> IOMetrics:

@@ -33,7 +33,8 @@ from repro.core.runner import WindowStream
 from repro.core.types import NULL_PTR, EngineConfig, OpBatch, OpKind
 
 __all__ = ["shard_extents", "sharded_store_init", "sharded_populate",
-           "sharded_store_view", "apply_batch_sharded", "run_windows_sharded"]
+           "sharded_store_view", "apply_batch_sharded", "run_windows_sharded",
+           "run_windows_sharded_traced"]
 
 _NONE = jnp.int32(-1)
 
@@ -106,6 +107,7 @@ def _psum_results(res: Results, axis: str) -> Results:
         combined=psum(res.combined.astype(jnp.int32)) > 0,
         wc_batch=psum(res.wc_batch - 1) + 1,
         retries=psum(res.retries),
+        rank=psum(res.rank),
     )
 
 
@@ -141,7 +143,7 @@ def _sharded_fn(cfg: EngineConfig, mesh, axis: str):
 
 @functools.lru_cache(maxsize=None)
 def _sharded_stream_fn(cfg: EngineConfig, mesh, axis: str,
-                       io_per_window: bool):
+                       io_per_window: bool, traced: bool = False):
     n_shards = int(mesh.shape[axis])
     per, hper = shard_extents(cfg, n_shards)
     lcfg = dataclasses.replace(cfg, n_slots=per, heap_slots=hper)
@@ -157,20 +159,26 @@ def _sharded_stream_fn(cfg: EngineConfig, mesh, axis: str,
             st, cr, res, io = engine.apply_batch(
                 lcfg, st, cr, batch, valid=valid, owned=owned,
                 slot_base=base)
-            return (st, cr), (res, io)
+            out = (res, io, jnp.sum(cr.credit)) if traced else (res, io)
+            return (st, cr), out
 
         st = dataclasses.replace(state, heap_top=state.heap_top[0])
-        (st, cr), (ress, ios) = jax.lax.scan(
+        (st, cr), outs = jax.lax.scan(
             step, (st, credits), (stream.batch, stream.valid))
+        ress, ios = outs[0], outs[1]
         st = dataclasses.replace(st, heap_top=st.heap_top[None])
         if not io_per_window:
             ios = jax.tree.map(lambda x: jnp.sum(x, axis=0), ios)
-        return (st, cr, _psum_results(ress, axis),
-                jax.tree.map(lambda x: jax.lax.psum(x, axis), ios))
+        res_io = (st, cr, _psum_results(ress, axis),
+                  jax.tree.map(lambda x: jax.lax.psum(x, axis), ios))
+        # credit mass is computed from the replicated credit table, so every
+        # shard already holds the identical (W,) trajectory
+        return res_io + (outs[2],) if traced else res_io
 
+    out_specs = (st_spec, P(), P(), P()) + ((P(),) if traced else ())
     fn = shard_map(run, mesh=mesh,
                    in_specs=(st_spec, P(), P()),
-                   out_specs=(st_spec, P(), P(), P()),
+                   out_specs=out_specs,
                    check_rep=False)
     return jax.jit(fn, donate_argnums=(0, 1))
 
@@ -205,4 +213,18 @@ def run_windows_sharded(cfg: EngineConfig, mesh, state: StoreState,
     ``credits`` are donated.
     """
     return _sharded_stream_fn(cfg, mesh, axis, io_per_window)(
+        state, credits, stream)
+
+
+def run_windows_sharded_traced(cfg: EngineConfig, mesh, state: StoreState,
+                               credits, stream: WindowStream, *,
+                               axis: str = "data"
+                               ) -> tuple[StoreState, object, Results, object,
+                                          jax.Array]:
+    """Sharded ``repro.core.runner.run_windows_traced``: returns
+    ``(state, credits, results, io_per_window, credit_mass)`` with the
+    ``(W,)`` per-window credit-table mass taken from the replicated credit
+    plane (identical on every shard), matching the single-device trace
+    bit-exactly.  ``state`` and ``credits`` are donated."""
+    return _sharded_stream_fn(cfg, mesh, axis, True, traced=True)(
         state, credits, stream)

@@ -1,1 +1,1 @@
-"""YCSB workloads + Zipf samplers."""
+"""YCSB workloads, Zipf samplers, and dynamic-contention scenarios."""

@@ -1,0 +1,172 @@
+"""Dynamic-contention scenarios: generator contracts and the AIMD
+adaptation regression — per-window ``pess_ratio`` must rise while a hotspot
+is hot and the hotspot's credits must drain (multiplicative decrease)
+within a bounded number of windows after it moves, for ``SyncMode.CIDER``
+on both the single-device and the 4-way CPU-mesh paths."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import runner
+from repro.core.credits import CreditState, _slot, credit_init
+from repro.core.engine import apply_batch, populate, store_init
+from repro.core.types import EngineConfig, OpBatch, OpKind, SyncMode
+from repro.dist import store as dstore
+from repro.launch.mesh import make_local_mesh
+from repro.workloads.dynamic import (SCENARIOS, churn, flash_crowd,
+                                     hotspot_shift, skew_drift)
+
+W, B, NK, NC, HK, SHIFT, TBL = 14, 256, 512, 64, 4, 7, 1024
+N_SHARDS = 4
+
+
+# ---------------------------------------------------------------------------
+# generator contracts
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", list(SCENARIOS))
+def test_scenario_stream_contract(name):
+    sc = SCENARIOS[name]
+    ops = sc.generate(6, 128, NK, NC, seed=1)
+    assert ops.kinds.shape == ops.keys.shape == ops.values.shape == (6, 128)
+    assert set(np.unique(ops.kinds)) <= {int(k) for k in OpKind}
+    assert ops.keys.min() >= 0 and ops.keys.max() < NK
+    np.testing.assert_array_equal(ops.clients[0], np.arange(128) % NC)
+    # drop-in for the fused runner
+    stream = runner.make_stream(ops.kinds, ops.keys, ops.values, n_cns=16)
+    assert stream.shape == (6, 128)
+
+
+def test_hotspot_shift_moves_the_hot_set():
+    ops, (set_a, set_b) = hotspot_shift(W, B, NK, NC, seed=5, hot_keys=HK,
+                                        shift_window=SHIFT, return_sets=True)
+    assert not set(set_a) & set(set_b)
+    pre = np.bincount(ops.keys[:SHIFT].ravel(), minlength=NK)
+    post = np.bincount(ops.keys[SHIFT:].ravel(), minlength=NK)
+    # the hot mass moves from A to B...
+    assert pre[set_a].sum() > 5 * pre[set_b].sum()
+    assert post[set_b].sum() > 5 * post[set_a].sum()
+    # ...but every old hot key keeps an UPDATE drain probe per window
+    # (background Zipf traffic may add SEARCHes on A; the probes are writes)
+    for w in range(SHIFT, W):
+        upd_a = np.isin(ops.keys[w], set_a) & (ops.kinds[w] == OpKind.UPDATE)
+        assert np.bincount(ops.keys[w][upd_a], minlength=NK)[set_a].min() >= 1
+
+
+def test_flash_crowd_ramps_up_then_down():
+    # 2 hot keys so the crowd's per-key peak clearly tops the Zipf head
+    ops = flash_crowd(13, B, NK, NC, seed=2, peak_window=6, peak_frac=0.8,
+                      hot_keys=2)
+    top = [np.bincount(ops.keys[w], minlength=NK).max() for w in (0, 6, 12)]
+    assert top[1] > 2 * top[0] and top[1] > 2 * top[2]
+
+
+def test_churn_alternates_insert_delete_phases_on_empty_region():
+    ops = churn(8, B, NK, NC, seed=3, phase_len=2, populated_frac=0.5)
+    n_pop = NK // 2
+    for w in range(8):
+        ins = ops.kinds[w] == OpKind.INSERT
+        dele = ops.kinds[w] == OpKind.DELETE
+        churny = ins | dele
+        assert churny.any()
+        assert (ops.keys[w][churny] >= n_pop).all()    # only the empty region
+        assert (ops.keys[w][~churny] < n_pop).all()    # base mix stays put
+        if (w // 2) % 2 == 0:
+            assert ins.any() and not dele.any()
+        else:
+            assert dele.any() and not ins.any()
+
+
+def test_skew_drift_increases_concentration():
+    ops = skew_drift(10, 2048, NK, NC, seed=4, theta0=0.2, theta1=1.2)
+    first = np.bincount(ops.keys[0], minlength=NK).max()
+    last = np.bincount(ops.keys[-1], minlength=NK).max()
+    assert last > 2 * first
+
+
+# ---------------------------------------------------------------------------
+# AIMD adaptation end-to-end (the §4.3 path a stationary stream never takes)
+# ---------------------------------------------------------------------------
+
+def _cfg():
+    return EngineConfig(n_slots=NK, heap_slots=NK + W * B,
+                        mode=SyncMode.CIDER)
+
+
+def _traced(path, cfg, credits, stream, pop_keys):
+    if path == "single":
+        st = populate(cfg, store_init(cfg), pop_keys, pop_keys)
+        return runner.run_windows_traced(cfg, st, credits, stream)
+    mesh = make_local_mesh(data=N_SHARDS)
+    st = dstore.sharded_populate(
+        cfg, N_SHARDS, dstore.sharded_store_init(cfg, N_SHARDS),
+        pop_keys, pop_keys)
+    return dstore.run_windows_sharded_traced(cfg, mesh, st, credits, stream)
+
+
+@pytest.mark.parametrize("path", ["single", f"sharded{N_SHARDS}"])
+def test_cider_adapts_across_hotspot_shift(path):
+    ops, (set_a, set_b) = hotspot_shift(W, B, NK, NC, seed=5, hot_keys=HK,
+                                        shift_window=SHIFT, return_sets=True)
+    stream = runner.make_stream(ops.kinds, ops.keys, ops.values, n_cns=NC)
+    cfg = _cfg()
+    _, cr, res, _, mass = _traced(path, cfg, credit_init(TBL), stream,
+                                  np.arange(NK))
+    upd = np.asarray(ops.kinds) == OpKind.UPDATE
+    pess_ratio = ((np.asarray(res.pessimistic) & upd).sum(-1)
+                  / np.maximum(upd.sum(-1), 1))
+    # cold start: the first window is fully optimistic, credits build after
+    assert pess_ratio[0] == 0.0
+    assert int(np.asarray(mass)[0]) == 0 < int(np.asarray(mass)[1])
+    # hot phase: contention identified, most writes go pessimistic
+    assert (pess_ratio[2:SHIFT] > 0.4).all()
+    # the shift is *felt*: stale credits don't cover the new hot set
+    assert pess_ratio[SHIFT] < 0.3
+    # ...and re-identified within a bounded number of windows
+    assert (pess_ratio[SHIFT + 3:] > 0.4).all()
+    # old hot set fully drained by the end, new hot set carries the credits
+    credit = np.asarray(cr.credit)
+    assert credit[np.asarray(_slot(jnp.asarray(set_a, jnp.int32), TBL))].sum() == 0
+    assert credit.sum() > 0
+
+
+@pytest.mark.parametrize("path", ["single", f"sharded{N_SHARDS}"])
+def test_cider_credits_drain_multiplicatively_after_shift(path):
+    """Feed only the post-shift windows to a store whose credit table is
+    warm on the OLD hot set: each window's lone drain probe per key takes
+    the pessimistic path with WC batch 1, which must at least halve the
+    credit (Algorithm 1's multiplicative decrease) until it hits 0."""
+    ops, (set_a, _) = hotspot_shift(W, B, NK, NC, seed=5, hot_keys=HK,
+                                    shift_window=SHIFT, return_sets=True)
+    slots_a = np.asarray(_slot(jnp.asarray(set_a, jnp.int32), TBL))
+    credit0 = jnp.zeros((TBL,), jnp.int32).at[slots_a].set(36)
+    credits = CreditState(credit=credit0,
+                          retry_record=jnp.zeros((TBL,), jnp.int32))
+    cfg = _cfg()
+    pop = np.arange(NK)
+    if path == "single":
+        st = populate(cfg, store_init(cfg), pop, pop)
+    else:
+        mesh = make_local_mesh(data=N_SHARDS)
+        st = dstore.sharded_populate(
+            cfg, N_SHARDS, dstore.sharded_store_init(cfg, N_SHARDS), pop, pop)
+    masses = [int(np.asarray(credits.credit)[slots_a].sum())]
+    for w in range(SHIFT, W):
+        batch = OpBatch.make(ops.kinds[w], ops.keys[w], ops.values[w],
+                             n_cns=NC)
+        if path == "single":
+            st, credits, _, _ = apply_batch(cfg, st, credits, batch)
+        else:
+            st, credits, _, _ = dstore.apply_batch_sharded(
+                cfg, mesh, st, credits, batch)
+        masses.append(int(np.asarray(credits.credit)[slots_a].sum()))
+    assert masses[0] == 36 * HK
+    for before, after in zip(masses, masses[1:]):
+        if before > 0:
+            assert after <= before // 2, masses
+    # bounded drain: ceil(log2(36)) windows of halving reach 0 well before
+    # the stream ends
+    assert 0 in masses[:7], masses

@@ -150,6 +150,121 @@ def test_generate_window_stream_replays_per_window_seeds():
         np.testing.assert_array_equal(ops.values[w], ref.values)
 
 
+@pytest.mark.parametrize("mode", MODES)
+def test_run_windows_traced_matches_loop_and_credit_mass(mode):
+    kinds, keys, values = _ops()
+    cfg = EngineConfig(n_slots=N_SLOTS, heap_slots=HEAP, mode=mode)
+    st0, cr0, _, _ = _init(cfg)
+    st1, cr1, ress, ios = _loop(cfg, st0, cr0, kinds, keys, values)
+    # credit mass AFTER each window, from the reference loop
+    st0, cr0, _, _ = _init(cfg)
+    cr, masses = cr0, []
+    for w in range(W):
+        batch = OpBatch.make(kinds[w], keys[w], values[w], n_cns=N_CNS)
+        st0, cr, _, _ = apply_batch(cfg, st0, cr, batch)
+        masses.append(int(jnp.sum(cr.credit)))
+
+    st0, cr0, _, _ = _init(cfg)
+    stream = runner.make_stream(kinds, keys, values, n_cns=N_CNS)
+    _, cr2, res2, ios2, mass2 = runner.run_windows_traced(cfg, st0, cr0,
+                                                          stream)
+    _assert_windows_equal(ress, ios, res2, ios2, cr1, cr2)
+    assert [int(m) for m in np.asarray(mass2)] == masses
+
+
+def test_sharded_traced_matches_single_device():
+    mesh = make_local_mesh(data=4)
+    kinds, keys, values = _ops()
+    cfg = EngineConfig(n_slots=N_SLOTS, heap_slots=HEAP, mode=SyncMode.CIDER)
+    st0, cr0, pop_keys, pop_vals = _init(cfg)
+    stream = runner.make_stream(kinds, keys, values, n_cns=N_CNS)
+    _, cr1, res1, ios1, mass1 = runner.run_windows_traced(cfg, st0, cr0,
+                                                          stream)
+    sst = dstore.sharded_populate(
+        cfg, 4, dstore.sharded_store_init(cfg, 4), pop_keys, pop_vals)
+    _, cr2, res2, ios2, mass2 = dstore.run_windows_sharded_traced(
+        cfg, mesh, sst, credit_init(256), stream)
+    for f in dataclasses.fields(res1):
+        np.testing.assert_array_equal(np.asarray(getattr(res1, f.name)),
+                                      np.asarray(getattr(res2, f.name)),
+                                      err_msg=f"Results.{f.name}")
+    for f in dataclasses.fields(IOMetrics):
+        np.testing.assert_array_equal(np.asarray(getattr(ios1, f.name)),
+                                      np.asarray(getattr(ios2, f.name)),
+                                      err_msg=f"IOMetrics.{f.name}")
+    np.testing.assert_array_equal(np.asarray(mass1), np.asarray(mass2))
+    np.testing.assert_array_equal(np.asarray(cr1.credit),
+                                  np.asarray(cr2.credit))
+
+
+def test_modeled_latency_uncontended_searches_exact():
+    """Distinct populated keys, SEARCH only: latency is the closed-form
+    index READ + value READ chain plus each op's place in the NIC queue."""
+    p = SimParams()
+    cfg = EngineConfig(n_slots=16, heap_slots=64, mode=SyncMode.CIDER)
+    st = populate(cfg, store_init(cfg), np.arange(16), np.arange(16))
+    kinds = np.full(8, OpKind.SEARCH, np.int32)
+    kinds[-1] = OpKind.NOP
+    batch = OpBatch.make(kinds, np.arange(8), np.zeros(8), n_cns=2)
+    _, _, res, _ = apply_batch(cfg, st, credit_init(64), batch)
+    lat = runner.modeled_latency(cfg, kinds, res, p)
+    # op i: 2 RTTs (index + value read) + 2i/mn_cap backlog behind i earlier
+    # 2-verb SEARCHes
+    want = p.rtt * 2.0 + 2.0 * np.arange(7) / p.mn_cap
+    np.testing.assert_allclose(lat[:7], want)
+    assert np.isnan(lat[7])                      # NOP lane masked out
+    stats = runner.latency_stats(lat)
+    assert stats.n_ops == 7 and stats.p50_us == pytest.approx(want[3], abs=.2)
+
+
+def _hot_update_stream(w=8, b=256, n_slots=64, seed=0):
+    """SEARCH/UPDATE mix with a strided cross-CN hot key and thin CNs (the
+    paper's 4-clients-per-CN shape, so local WC can't absorb the queue) —
+    enough windows for CIDER's credits to warm up."""
+    rng = np.random.default_rng(seed)
+    kinds = rng.choice([OpKind.SEARCH, OpKind.UPDATE], size=(w, b),
+                       p=(0.5, 0.5)).astype(np.int32)
+    keys = rng.integers(0, n_slots, (w, b)).astype(np.int32)
+    values = rng.integers(0, 10_000, (w, b)).astype(np.int32)
+    keys[:, ::4] = 5
+    kinds[:, ::4] = OpKind.UPDATE
+    return kinds, keys, values
+
+
+def test_modeled_latency_contended_ordering():
+    """On a contended write stream the modeled tail must reproduce the
+    paper's ordering (Figs 11-12): CIDER's combining flattens p99 below
+    OSYNC's CAS-retry storm and below the lock-queue modes."""
+    kinds, keys, values = _hot_update_stream()
+    n_slots, heap = 64, 64 + kinds.size
+    p = SimParams()
+    p99, lats, ress = {}, {}, {}
+    for mode in MODES:
+        cfg = EngineConfig(n_slots=n_slots, heap_slots=heap, mode=mode)
+        pop = np.arange(n_slots)
+        st = populate(cfg, store_init(cfg), pop, pop)
+        stream = runner.make_stream(kinds, keys, values, n_cns=64)
+        _, _, res, _ = runner.run_windows(cfg, st, credit_init(256), stream)
+        lat = runner.modeled_latency(cfg, kinds, res, p)
+        assert np.isfinite(lat[~np.isnan(lat)]).all()
+        p99[mode], lats[mode], ress[mode] = (runner.latency_stats(lat).p99_us,
+                                             lat, res)
+    assert p99[SyncMode.CIDER] < p99[SyncMode.OSYNC]
+    assert p99[SyncMode.CIDER] < p99[SyncMode.SPIN]
+    assert p99[SyncMode.CIDER] < p99[SyncMode.MCS]
+    # rank-r optimistic writers wait r failed CAS rounds: latency grows with
+    # rank on the hot key under OSYNC
+    res, lat = ress[SyncMode.OSYNC], lats[SyncMode.OSYNC]
+    hot = (keys == 5) & (kinds == OpKind.UPDATE) & ~np.asarray(res.combined)
+    ranks = np.asarray(res.rank)[hot]
+    assert np.corrcoef(ranks, lat[hot])[0, 1] > 0.9
+
+
+def test_latency_stats_empty():
+    stats = runner.latency_stats(np.array([np.nan, np.nan]))
+    assert stats.n_ops == 0 and stats.p99_us == 0.0
+
+
 def test_modeled_throughput_iops_and_bandwidth_bounds():
     p = SimParams()
     z = jnp.zeros((), jnp.int32)
