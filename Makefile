@@ -1,7 +1,8 @@
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test test-fast bench-smoke bench-scenarios-smoke check-regression lint
+.PHONY: test test-fast bench-smoke bench-scenarios-smoke \
+    bench-recovery-smoke check-regression lint
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -12,7 +13,8 @@ test:
 test-fast:
 	python -m pytest -x -q tests/test_engine.py tests/test_runner.py \
 	    tests/test_dist.py tests/test_dist_store.py tests/test_stores.py \
-	    tests/test_workloads.py tests/test_dynamic.py tests/test_kernels.py
+	    tests/test_workloads.py tests/test_dynamic.py tests/test_kernels.py \
+	    tests/test_recovery.py tests/test_ft.py
 
 # tiny engine benchmark on the fused runner -> BENCH_engine.fast.json
 # (the committed full-size baseline BENCH_engine.json is regenerated with
@@ -25,10 +27,17 @@ bench-smoke:
 bench-scenarios-smoke:
 	python -m benchmarks.scenarios --fast
 
-# perf-regression gate over the two fast JSONs (CI fails on >10% CIDER
-# modeled-mops drop or on CIDER losing the paper's mode ordering); depends
-# on the smoke targets so it never gates against stale JSONs
-check-regression: bench-smoke bench-scenarios-smoke
+# crash-recovery scenario matrix -> BENCH_recovery.fast.json, including the
+# 4-way failover-bill-equality assertion (committed full-size baseline:
+# `python -m benchmarks.recovery`, no --fast)
+bench-recovery-smoke:
+	python -m benchmarks.recovery --fast
+
+# perf-regression gate over the three fast JSONs (CI fails on >10% CIDER
+# modeled-mops drop, on CIDER losing the paper's mode ordering, or on CIDER
+# losing its recovery-overhead lead); depends on the smoke targets so it
+# never gates against stale JSONs
+check-regression: bench-smoke bench-scenarios-smoke bench-recovery-smoke
 	python -m benchmarks.check_regression
 
 lint:

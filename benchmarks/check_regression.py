@@ -6,9 +6,14 @@ fixed) would merge green.  Now CI fails when either
 
 * CIDER's ``modeled_mops`` drops more than ``--tolerance`` (default 10%)
   below the committed baseline (``benchmarks/baselines.json``), in the
-  engine benchmark or in any dynamic-contention scenario, or
+  engine benchmark, any dynamic-contention scenario, or any recovery
+  scenario, or
 * CIDER stops *leading* OSYNC/MCS/SPIN on ``modeled_mops`` anywhere — the
-  paper's headline ordering (§5).
+  paper's headline ordering (§5), or
+* CIDER loses a *recovery* lead: its orphan-repair verb bill
+  (``repair_cas``) or post-crash modeled p99 exceeds MCS's or SPIN's in
+  any recovery scenario (OSYNC is lock-free and strands nothing — it is
+  not a recovery rival, it pays on every non-crash window instead).
 
 ``modeled_mops`` is derived from the exact metered verb bill of seeded
 streams, so it is bit-deterministic across machines — the baselines are
@@ -17,9 +22,9 @@ exact values with a tolerance band, not flaky wall-clock numbers.
     PYTHONPATH=src python -m benchmarks.check_regression
     PYTHONPATH=src python -m benchmarks.check_regression --update-baseline
 
-Run ``make bench-smoke bench-scenarios-smoke`` first (CI does); use
-``--update-baseline`` after an intentional perf change to rewrite
-``benchmarks/baselines.json`` from the current fast JSONs.
+Run ``make bench-smoke bench-scenarios-smoke bench-recovery-smoke`` first
+(CI does); use ``--update-baseline`` after an intentional perf change to
+rewrite ``benchmarks/baselines.json`` from the current fast JSONs.
 """
 from __future__ import annotations
 
@@ -43,14 +48,33 @@ def _load(path: str, what: str) -> dict:
         return json.load(f)
 
 
-def _collect(engine: dict, scenarios: dict) -> dict:
+def _collect(engine: dict, scenarios: dict, recovery: dict) -> dict:
     """{check_name: {mode: modeled_mops}} for every gated benchmark."""
     out = {"engine": {m: engine[m]["modeled_mops"] for m in MODES}}
     for name, topos in scenarios["scenarios"].items():
         for topo, recs in topos.items():
             out[f"scenario/{name}/{topo}"] = {
                 m: recs[m]["modeled_mops"] for m in MODES}
+    for name, sc in recovery["scenarios"].items():
+        out[f"recovery/{name}"] = {
+            m: sc["modes"][m]["modeled_mops"] for m in MODES}
     return out
+
+
+def check_recovery(recovery: dict) -> list[str]:
+    """CIDER must keep its recovery-overhead lead: fewer orphan-repair verbs
+    and a lower post-crash tail than the locking rivals, per scenario."""
+    failures = []
+    for name, sc in recovery["scenarios"].items():
+        modes = sc["modes"]
+        for metric in ("repair_cas", "p99_post_crash_us"):
+            cider = modes["CIDER"][metric]
+            for rival in ("MCS", "SPIN"):
+                if cider > modes[rival][metric]:
+                    failures.append(
+                        f"recovery/{name}: CIDER lost its {metric} lead over "
+                        f"{rival} ({cider} > {modes[rival][metric]})")
+    return failures
 
 
 def check(actual: dict, baseline: dict, tolerance: float) -> list[str]:
@@ -85,6 +109,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--engine", default="BENCH_engine.fast.json")
     ap.add_argument("--scenarios", default="BENCH_scenarios.fast.json")
+    ap.add_argument("--recovery", default="BENCH_recovery.fast.json")
     ap.add_argument("--baseline", default=DEFAULT_BASELINE)
     ap.add_argument("--tolerance", type=float, default=0.10,
                     help="allowed fractional drop of CIDER modeled_mops")
@@ -94,7 +119,8 @@ def main():
 
     engine = _load(args.engine, "engine benchmark")
     scenarios = _load(args.scenarios, "scenario benchmark")
-    actual = _collect(engine, scenarios)
+    recovery = _load(args.recovery, "recovery benchmark")
+    actual = _collect(engine, scenarios, recovery)
 
     if args.update_baseline:
         payload = {
@@ -114,6 +140,7 @@ def main():
 
     baseline = _load(args.baseline, "committed baseline")
     failures = check(actual, baseline, args.tolerance)
+    failures += check_recovery(recovery)
     if failures:
         print(f"PERF REGRESSION GATE: {len(failures)} failure(s)")
         for msg in failures:

@@ -25,7 +25,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-__all__ = ["CreditState", "credit_init", "credit_decide", "credit_feedback"]
+__all__ = ["CreditState", "credit_init", "credit_slot", "credit_decide",
+           "credit_feedback"]
 
 
 @jax.tree_util.register_dataclass
@@ -40,10 +41,16 @@ def credit_init(table_size: int) -> CreditState:
                        retry_record=jnp.zeros((table_size,), jnp.int32))
 
 
-def _slot(keys: jax.Array, table_size: int) -> jax.Array:
-    # Fibonacci hash — good avalanche for sequential slot ids.
+def credit_slot(keys: jax.Array, table_size: int) -> jax.Array:
+    """Direct-mapped credit-table slot of each key (Fibonacci hash — good
+    avalanche for sequential slot ids).  Public because the engine's orphan
+    model (crash recovery, §4.6) consults the table read-only to decide
+    which crashed writers were on the pessimistic path."""
     h = (keys.astype(jnp.uint32) * jnp.uint32(2654435761)) >> jnp.uint32(7)
     return (h % jnp.uint32(table_size)).astype(jnp.int32)
+
+
+_slot = credit_slot
 
 
 def credit_decide(state: CreditState, keys: jax.Array, is_write: jax.Array,

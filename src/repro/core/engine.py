@@ -38,6 +38,13 @@ The shard_map path (``repro.dist.store``) partitions the store over the
 ``slot_base``: the data plane then covers only the shard's keys while the
 credit plane still sees the full window (see ``apply_batch``'s docstring and
 DESIGN.md §3.3).
+
+Crash recovery (§4.6, DESIGN.md §8): ``apply_batch`` additionally accepts a
+liveness plane (``alive``/``died`` CN masks).  Ops from dead CNs are dropped
+at the window boundary; the pessimistic writes a newly-died CN had in flight
+strand orphaned locks, which surviving waiters detect via the stale-epoch
+read and break with a repair CAS — billed exactly (``IOMetrics.repair_cas``)
+with the lease wait charged to the blocked queue (``Results.orphan_wait``).
 """
 from __future__ import annotations
 
@@ -48,7 +55,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import combine as wc
-from repro.core.credits import CreditState, credit_decide, credit_feedback
+from repro.core.credits import (CreditState, credit_decide, credit_feedback,
+                                credit_slot)
 from repro.core.types import (NULL_PTR, EngineConfig, IOMetrics, OpBatch,
                               OpKind, SyncMode)
 
@@ -68,6 +76,9 @@ class StoreState:
     epoch: jax.Array     # (n_slots,) int32 lock epoch (fault tolerance, §4.6)
     heap: jax.Array      # (heap_slots,) int32 out-of-place value payloads
     heap_top: jax.Array  # () int32 bump cursor
+    stranded: jax.Array  # (n_slots,) int32 orphaned lock nodes on this slot —
+                         # a CN died holding/queued on the lock and no live
+                         # waiter has broken it yet (crash recovery, §4.6)
 
 
 @jax.tree_util.register_dataclass
@@ -82,6 +93,10 @@ class Results:
     rank: jax.Array         # (B,) int32 — wait-queue rank at execution
                             # (0 = queue head / uncontended); feeds the
                             # modeled-latency derivation (runner.modeled_latency)
+    orphan_wait: jax.Array  # (B,) int32 — orphaned (holder-dead) locks this op
+                            # waited a lease expiry on before its queue could
+                            # repair them (§4.6); modeled latency charges
+                            # lease_us + the repair RTTs per unit
 
 
 def store_init(cfg: EngineConfig) -> StoreState:
@@ -91,6 +106,7 @@ def store_init(cfg: EngineConfig) -> StoreState:
         epoch=jnp.zeros((cfg.n_slots,), jnp.int32),
         heap=jnp.full((cfg.heap_slots,), _NONE, jnp.int32),
         heap_top=jnp.zeros((), jnp.int32),
+        stranded=jnp.zeros((cfg.n_slots,), jnp.int32),
     )
 
 
@@ -187,6 +203,8 @@ def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
                 batch: OpBatch, valid: jax.Array | None = None,
                 owned: jax.Array | None = None,
                 slot_base: jax.Array | None = None,
+                alive: jax.Array | None = None,
+                died: jax.Array | None = None,
                 ) -> tuple[StoreState, CreditState, Results, IOMetrics]:
     """Execute one synchronization window. See module docstring.
 
@@ -198,18 +216,35 @@ def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
     and AIMD feedback, §4.3) runs on the FULL batch with global keys on every
     shard, so the replicated credit table evolves identically everywhere and
     per-shard I/O sums to the single-device bill exactly.
+
+    Liveness plane (crash recovery, §4.6 — ``repro.recovery``): ``alive`` is
+    a ``(n_cns,)`` mask of compute nodes alive through this window and
+    ``died`` marks CNs that crashed *at this window* (were alive at window
+    start).  Ops from non-alive CNs are dropped at the window boundary —
+    exactly as a real crash strands them — while the in-flight pessimistic
+    writes of newly-died CNs strand orphaned locks that the next surviving
+    waiter detects via the stale-epoch read and breaks with a repair CAS
+    (billed into ``IOMetrics.repair_cas`` and the affected queue's
+    ``Results.orphan_wait``); locks on slots with no surviving waiter stay
+    recorded in ``StoreState.stranded`` until their next locker arrives.
     """
     b = batch.kinds.shape[0]
+    kinds, keys, values, pos, cn = (batch.kinds, batch.keys, batch.values,
+                                    batch.pos, batch.cn)
     if valid is None:
-        valid = batch.kinds != OpKind.NOP
+        valid = kinds != OpKind.NOP
     else:
-        valid = valid & (batch.kinds != OpKind.NOP)
+        valid = valid & (kinds != OpKind.NOP)
+    # present: ops issued into this window (including ones whose CN crashes
+    # mid-window — the orphan candidates); valid: ops that complete.
+    present = valid
+    if alive is not None:
+        a = jnp.asarray(alive, bool)
+        valid = valid & a[jnp.clip(cn, 0, a.shape[0] - 1)]
     # valid: ops present in the window (credit plane); valid_o: ops whose
     # store state this shard owns (data plane).  Identical when not sharded.
     valid_o = valid if owned is None else valid & owned
     base = jnp.int32(0) if slot_base is None else jnp.asarray(slot_base, jnp.int32)
-    kinds, keys, values, pos, cn = (batch.kinds, batch.keys, batch.values,
-                                    batch.pos, batch.cn)
     is_search = (kinds == OpKind.SEARCH) & valid_o
     is_insert = (kinds == OpKind.INSERT) & valid_o
     is_update = (kinds == OpKind.UPDATE) & valid_o
@@ -390,6 +425,86 @@ def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
 
     executed = writes
 
+    # ---- 5b. lease/epoch orphaned-lock repair (crash recovery, §4.6) ------
+    # A CN that dies mid-window strands the locks it held or was queued on.
+    # The next surviving waiter notices the stale epoch (the holder stopped
+    # FAA-ing), waits out the lease, and breaks the lock with a repair CAS.
+    # Mode asymmetry — the recovery result: CIDER's combined queue has ONE
+    # lock entry per queue and SPIN one lock word per key, while MCS strands
+    # the whole chain of dead queue nodes, each repaired by its successor.
+    per_op_orphan = jnp.zeros((b,), jnp.int32)
+    repair_total = jnp.zeros((), i64)
+    orphan_out = jnp.zeros((), i64)
+    if cfg.mode == SyncMode.OSYNC:
+        stranded = state.stranded          # lock-free: crashes strand nothing
+    else:
+        slot_u = jnp.clip(keys - base, 0, cfg.n_slots - 1)
+        if died is None:
+            add_slot = jnp.zeros((cfg.n_slots,), jnp.int32)
+        else:
+            d = jnp.asarray(died, bool)
+            dead_w = (present & d[jnp.clip(cn, 0, d.shape[0] - 1)]
+                      & ((kinds == OpKind.UPDATE) | (kinds == OpKind.DELETE)))
+            if owned is not None:
+                dead_w = dead_w & owned
+            if cfg.mode == SyncMode.CIDER:
+                # only writers the credit table routes pessimistically held a
+                # lock when they crashed; a dead optimistic writer strands
+                # nothing (its out-of-place CAS simply never lands) — the
+                # lock-free-crash argument FUSEE makes.  DELETEs always lock.
+                cslot = credit_slot(keys, credits.credit.shape[0])
+                dead_node = dead_w & ((credits.credit[cslot] > 0)
+                                      | (kinds == OpKind.DELETE))
+            elif cfg.local_wc:
+                # only the local executor of each (key, CN) UPDATE group had
+                # left the crashed CN for the memory pool; DELETEs are never
+                # locally combined (they lock independently on the live path
+                # too), so each dead DELETE strands its own node
+                dead_upd = dead_w & (kinds == OpKind.UPDATE)
+                dead_node = (wc.local_executors(keys, cn, pos, dead_upd)
+                             | (dead_w & (kinds == OpKind.DELETE)))
+            else:
+                dead_node = dead_w
+            stats_dead = wc.per_key_stats(keys, pos, dead_node)
+            per_key_add = (stats_dead.mult_of if cfg.mode == SyncMode.MCS
+                           else jnp.minimum(stats_dead.mult_of, 1))
+            add_slot = jnp.zeros((cfg.n_slots,), jnp.int32).at[
+                jnp.where(stats_dead.is_tail, slot_u, cfg.n_slots)
+            ].add(jnp.where(stats_dead.is_tail, per_key_add, 0), mode="drop")
+        tot = state.stranded + add_slot
+        if cfg.mode != SyncMode.MCS:
+            tot = jnp.minimum(tot, 1)      # one lock word/entry per key
+        # any surviving locker on the slot repairs all its stranded nodes
+        # this window; untouched slots stay stranded for their next locker
+        surv = loc_exec_pess | is_delete
+        surv_slot = jnp.zeros((cfg.n_slots,), bool).at[
+            jnp.where(surv, slot_u, cfg.n_slots)].set(True, mode="drop")
+        repaired = surv_slot & (tot > 0)
+        n_repair = jnp.sum(jnp.where(repaired, tot, 0).astype(i64))
+        stranded = jnp.where(repaired, 0, tot)
+        orphan_out = jnp.sum((stranded > 0).astype(i64))
+        per_op_orphan = jnp.where(surv & repaired[slot_u], tot[slot_u], 0)
+        # bill: one stale-epoch READ of the lock entry + one break CAS per
+        # stranded node, charged to the blocked queue
+        reads += n_repair
+        cas += n_repair
+        repair_total += n_repair
+        mn_bytes += n_repair * (cfg.lock_bytes + 8)
+        if cfg.mode == SyncMode.SPIN:
+            # spinners keep re-CASing the orphaned word until the lease
+            # expires — MN verbs MCS/CIDER waiters never issue (they wait
+            # CN-locally); these polls ARE recovery overhead, so they are
+            # folded into repair_cas as well
+            pollc = _backoff_polls(jnp.asarray(cfg.lease_poll_rounds, jnp.int32),
+                                   cfg.backoff_cap)
+            lease_polls = per_op_orphan * pollc
+            polls_lease = s(lease_polls)
+            cas += polls_lease
+            retries_total += polls_lease
+            repair_total += polls_lease
+            mn_bytes += polls_lease * cfg.ptr_bytes
+            per_op_retries = per_op_retries + lease_polls
+
     # ---- 6. credit feedback (§4.3, Algorithm 1 lines 13-22) ---------------
     # Like the decision, feedback runs on the FULL window so replicated
     # credit tables stay identical across shards; when unsharded the full
@@ -427,14 +542,17 @@ def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
         epoch = state.epoch
 
     new_state = StoreState(ptr=ptr, ver=ver, epoch=epoch, heap=heap,
-                           heap_top=state.heap_top + n_commits)
+                           heap_top=state.heap_top + n_commits,
+                           stranded=stranded)
     # unsort results
     ok = jnp.zeros((b,), bool).at[perm].set(ok_s)
     value = jnp.full((b,), _NONE, jnp.int32).at[perm].set(val_s)
     res = Results(ok=ok, value=value, pessimistic=pess,
                   combined=per_op_combined, wc_batch=per_op_batch,
-                  retries=per_op_retries, rank=per_op_rank)
+                  retries=per_op_retries, rank=per_op_rank,
+                  orphan_wait=per_op_orphan)
     io = IOMetrics(reads=reads, writes=writes, cas=cas, faa=faa,
                    cn_msgs=cn_msgs, mn_bytes=mn_bytes, retries=retries_total,
-                   combined=combined_total, executed=executed)
+                   combined=combined_total, executed=executed,
+                   repair_cas=repair_total, orphan_windows=orphan_out)
     return new_state, credits3, res, io

@@ -48,6 +48,16 @@ V_READ, V_WRITE, V_CAS, V_FAA, V_CN = range(5)
 _BIG = jnp.int32(2**30)
 
 
+def _fail_lanes(p: SimParams) -> tuple[int, ...]:
+    """All lanes scheduled to die at ``fail_tick``: the legacy single
+    ``fail_lane`` plus the ``fail_lanes`` set — multi-CN crash scenarios
+    run on the sim path with the same deadlock-repair machinery."""
+    lanes = tuple(int(x) for x in p.fail_lanes)
+    if p.fail_lane >= 0:
+        lanes += (p.fail_lane,)
+    return tuple(sorted(set(lanes)))
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class SimState:
@@ -383,7 +393,7 @@ def tick(p: SimParams, mode: SyncMode, streams, state: SimState, t
     issue(plain2 & ~is_delete, MW, V_WRITE, p.value_bytes)
     # deadlock detection & repair (§4.6): epoch stagnant for max_wait
     still = m & ~combed & ~acq2
-    if p.fail_lane >= 0:
+    if _fail_lanes(p):
         stuck = still & (t - s.wait_start > p.max_wait)
         repair = _scatter_min_id(s.hkey, stuck, H, n)
         now_serving = s.now_serving.at[jnp.where(repair, s.hkey, H)].add(1, mode="drop")
@@ -506,8 +516,9 @@ def tick(p: SimParams, mode: SyncMode, streams, state: SimState, t
     op_start = jnp.where(fin, t + p.think, s.op_start)
 
     # ============ inject failure (§4.6) ======================================
-    if p.fail_lane >= 0:
-        kill = (ids == p.fail_lane) & (t >= p.fail_tick)
+    fl = _fail_lanes(p)
+    if fl:
+        kill = jnp.isin(ids, jnp.asarray(fl, jnp.int32)) & (t >= p.fail_tick)
         new_phase = jnp.where(kill, DEAD, new_phase)
 
     # ============ network: issue all MN verbs of this tick ===================

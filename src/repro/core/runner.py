@@ -57,9 +57,18 @@ __all__ = ["WindowStream", "make_stream", "run_windows", "run_windows_traced",
 @dataclasses.dataclass
 class WindowStream:
     """W stacked synchronization windows: every ``OpBatch`` leaf plus the
-    validity mask carries a leading window axis ``(W, B)``."""
+    validity mask carries a leading window axis ``(W, B)``.
+
+    ``alive`` is the liveness plane (crash recovery, §4.6): row ``w`` masks
+    the compute nodes alive through window ``w``.  A CN whose bit drops
+    between consecutive windows *died at* the later window — its in-flight
+    ops are dropped at the window boundary and its pessimistic writes strand
+    orphaned locks (see ``engine.apply_batch``).  All-ones (the
+    ``make_stream`` default) reproduces the failure-free behavior bit-exactly.
+    """
     batch: OpBatch      # all leaves (W, B)
     valid: jax.Array    # (W, B) bool
+    alive: jax.Array    # (W, n_cns) bool — CN liveness per window
 
     @property
     def shape(self) -> tuple[int, int]:
@@ -68,12 +77,15 @@ class WindowStream:
 
 def make_stream(kinds, keys, values, n_cns: int = 1,
                 lanes_per_cn: int | None = None,
-                valid: jax.Array | None = None) -> WindowStream:
+                valid: jax.Array | None = None,
+                alive: jax.Array | None = None) -> WindowStream:
     """Stack ``(W, B)`` op arrays into a ``WindowStream``.
 
     Window ``w`` of the result is exactly ``OpBatch.make(kinds[w], keys[w],
     values[w], n_cns, lanes_per_cn)`` — same serialization priorities and CN
     assignment — so the fused scan sees the batches the per-window loop saw.
+    ``alive`` (``(W, n_cns)`` bool, default all alive) attaches a liveness
+    schedule; build one with ``repro.recovery.liveness``.
     """
     kinds = jnp.asarray(kinds, jnp.int32)
     keys = jnp.asarray(keys, jnp.int32)
@@ -85,25 +97,41 @@ def make_stream(kinds, keys, values, n_cns: int = 1,
     cn = (pos // lanes_per_cn) % max(n_cns, 1)
     if valid is None:
         valid = kinds != OpKind.NOP
+    if alive is None:
+        alive = jnp.ones((w, max(n_cns, 1)), bool)
+    else:
+        alive = jnp.asarray(alive, bool)
+        if alive.shape != (w, max(n_cns, 1)):
+            raise ValueError(
+                f"alive is {alive.shape}, expected ({w}, {max(n_cns, 1)}) — "
+                f"the liveness schedule must match the stream's windows AND "
+                f"its CN count (a mismatch would silently mis-drop ops)")
     batch = OpBatch(kinds=kinds, keys=keys, values=values, pos=pos, cn=cn)
-    return WindowStream(batch=batch, valid=jnp.asarray(valid, bool))
+    return WindowStream(batch=batch, valid=jnp.asarray(valid, bool),
+                        alive=alive)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "io_per_window", "traced"),
                    donate_argnums=(1, 2))
 def _scan_windows(cfg: EngineConfig, state: StoreState, credits: CreditState,
-                  stream: WindowStream, io_per_window: bool, traced: bool):
+                  stream: WindowStream, prev_alive: jax.Array,
+                  io_per_window: bool, traced: bool):
     """The one fused window scan behind ``run_windows``/``run_windows_traced``
     (and mirrored by ``dist.store``'s sharded variant)."""
     def step(carry, win):
-        st, cr = carry
-        batch, valid = win
-        st, cr, res, io = engine.apply_batch(cfg, st, cr, batch, valid=valid)
+        st, cr, prev, = carry
+        batch, valid, alive = win
+        # CNs alive at window start but not through this window died HERE —
+        # their in-flight pessimistic writes strand locks (engine step 5b)
+        died = prev & ~alive
+        st, cr, res, io = engine.apply_batch(cfg, st, cr, batch, valid=valid,
+                                             alive=alive, died=died)
         out = (res, io, jnp.sum(cr.credit)) if traced else (res, io)
-        return (st, cr), out
+        return (st, cr, alive), out
 
-    (state, credits), outs = jax.lax.scan(
-        step, (state, credits), (stream.batch, stream.valid))
+    (state, credits, _), outs = jax.lax.scan(
+        step, (state, credits, prev_alive),
+        (stream.batch, stream.valid, stream.alive))
     results, ios = outs[0], outs[1]
     if not io_per_window:
         ios = jax.tree.map(lambda x: jnp.sum(x, axis=0), ios)
@@ -112,8 +140,19 @@ def _scan_windows(cfg: EngineConfig, state: StoreState, credits: CreditState,
     return state, credits, results, ios
 
 
+def _prev_alive(stream: WindowStream, prev_alive) -> jax.Array:
+    """Default liveness at stream start: deaths 'at window 0' cannot strand
+    anything (nothing was in flight before the stream began), so the initial
+    previous-alive row is row 0 itself.  ``repro.recovery`` passes the last
+    alive row of the preceding segment when a run is split (e.g. around a
+    shard failover), so a crash at a segment boundary still strands."""
+    return stream.alive[0] if prev_alive is None else jnp.asarray(prev_alive,
+                                                                  bool)
+
+
 def run_windows(cfg: EngineConfig, state: StoreState, credits: CreditState,
                 stream: WindowStream, io_per_window: bool = False,
+                prev_alive: jax.Array | None = None,
                 ) -> tuple[StoreState, CreditState, Results, IOMetrics]:
     """Execute every window of ``stream`` in one fused ``lax.scan``.
 
@@ -126,11 +165,13 @@ def run_windows(cfg: EngineConfig, state: StoreState, credits: CreditState,
     the window axis and ``io`` summed across windows (``io_per_window=True``
     keeps the per-window bill, leaves shaped ``(W,)``).
     """
-    return _scan_windows(cfg, state, credits, stream, io_per_window, False)
+    return _scan_windows(cfg, state, credits, stream,
+                         _prev_alive(stream, prev_alive), io_per_window, False)
 
 
 def run_windows_traced(cfg: EngineConfig, state: StoreState,
                        credits: CreditState, stream: WindowStream,
+                       prev_alive: jax.Array | None = None,
                        ) -> tuple[StoreState, CreditState, Results, IOMetrics,
                                   jax.Array]:
     """``run_windows`` with the AIMD trajectory kept: returns
@@ -140,7 +181,8 @@ def run_windows_traced(cfg: EngineConfig, state: StoreState,
     dynamic-contention scenarios plot.  Same bit-exact per-window semantics
     and donation contract as ``run_windows``.
     """
-    return _scan_windows(cfg, state, credits, stream, True, True)
+    return _scan_windows(cfg, state, credits, stream,
+                         _prev_alive(stream, prev_alive), True, True)
 
 
 def io_window(ios: IOMetrics, w: int) -> IOMetrics:
@@ -191,11 +233,20 @@ def modeled_latency(cfg: EngineConfig, kinds, res: Results, p: SimParams,
       batch position), so retry storms inflate everyone's tail, not just the
       retrying op's.
 
+    * **lease waits** (crash recovery, §4.6) — an op whose wait queue found
+      an orphaned (holder-dead) lock waits ``Results.orphan_wait`` lease
+      expirations (``p.lease_us`` each) plus the stale-epoch READ + repair
+      CAS round trips before its queue can proceed.  MCS queues wait once
+      per dead chain node; CIDER/SPIN once per key — the repair asymmetry
+      the recovery benchmark measures.
+
     Aggregate ``IOMetrics`` stay the *exact* bill; this per-op split is the
     documented approximation (locally-combined baseline writers are billed
     as rank-0 writers, CN<->CN hops cost ``p.cn_rtt`` uncontended).  Works
     on flat ``(B,)`` or window-stacked ``(W, B)`` results; invalid lanes are
-    NaN (``latency_stats`` ignores them).
+    NaN (``latency_stats`` ignores them).  When a liveness schedule dropped
+    ops, pass the post-drop validity (``recovery.liveness`` provides it) so
+    dead lanes are masked out.
     """
     kinds = np.asarray(kinds)
     ok = np.asarray(res.ok)
@@ -261,7 +312,11 @@ def modeled_latency(cfg: EngineConfig, kinds, res: Results, p: SimParams,
         verbs = np.where(update & pess & ~comb, idx + 4.0 + (m > 1), verbs)
     verbs = np.where(valid, verbs, 0.0)
     backlog = np.cumsum(verbs, axis=-1) - verbs
-    lat = rtt * chain + extra + backlog / float(p.mn_cap)
+    # orphaned-lock lease waits: each unit is one lease expiry + the
+    # stale-epoch READ + repair CAS of the break (2 RTTs)
+    orphan = np.asarray(res.orphan_wait).astype(np.float64)
+    lat = (rtt * chain + extra + backlog / float(p.mn_cap)
+           + orphan * (float(p.lease_us) + 2.0 * rtt))
     return np.where(valid, lat, np.nan)
 
 

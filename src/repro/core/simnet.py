@@ -68,7 +68,13 @@ class SimParams:
     # fault tolerance (§4.6)
     fail_lane: int = -1          # lane that dies ...
     fail_tick: int = -1          # ... at this tick (-1 = no failure)
+    fail_lanes: tuple[int, ...] = ()  # additional lanes dying at fail_tick —
+                                 # multi-CN crash scenarios on the sim path
     max_wait: int = 4096         # deadlock detection: max lock-hold duration
+    # engine-path modeled latency: lease a blocked queue waits out before an
+    # orphaned (holder-dead, epoch-stale) lock may be broken with a repair
+    # CAS (runner.modeled_latency; the sim path uses max_wait directly)
+    lease_us: int = 512
 
 
 @jax.tree_util.register_dataclass

@@ -65,6 +65,11 @@ class IOMetrics:
     retries: jax.Array    # redundant (failed) CAS attempts — paper Fig 1 metric
     combined: jax.Array   # ops whose write was combined away (WC rate numerator)
     executed: jax.Array   # ops that reached the store
+    repair_cas: jax.Array     # orphan-repair verbs (§4.6): epoch-stale lock
+                              # break CAS + (SPIN) lease-expiry polls — the
+                              # recovery I/O bill; also folded into reads/cas
+    orphan_windows: jax.Array  # slot-windows spent with a stranded (orphaned)
+                               # lock still outstanding at window end
 
     @property
     def mn_iops(self) -> jax.Array:
@@ -95,7 +100,7 @@ class LatencyStats:
 
 def io_zeros() -> IOMetrics:
     z = jnp.zeros((), jnp.int64) if jax.config.jax_enable_x64 else jnp.zeros((), jnp.int32)
-    return IOMetrics(*([z] * 9))
+    return IOMetrics(*([z] * len(dataclasses.fields(IOMetrics))))
 
 
 def io_add(a: IOMetrics, b: IOMetrics) -> IOMetrics:
@@ -151,3 +156,8 @@ class EngineConfig:
     aimd_factor: int = 2
     # SPIN backoff cap (truncated exponential), in poll-interval rounds
     backoff_cap: int = 6
+    # Crash recovery (§4.6): how many poll-interval rounds a SPIN waiter
+    # spends re-CASing an orphaned lock before the lease expires and the
+    # repair CAS succeeds (MCS/CIDER waiters wait locally — ShiftLock's
+    # design point — so only SPIN pays MN verbs for the lease).
+    lease_poll_rounds: int = 16

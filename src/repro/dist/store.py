@@ -22,6 +22,8 @@ from __future__ import annotations
 import dataclasses
 import functools
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
@@ -29,14 +31,21 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import engine
 from repro.core.engine import Results, StoreState
-from repro.core.runner import WindowStream
+from repro.core.runner import WindowStream, _prev_alive
 from repro.core.types import NULL_PTR, EngineConfig, OpBatch, OpKind
 
 __all__ = ["shard_extents", "sharded_store_init", "sharded_populate",
            "sharded_store_view", "apply_batch_sharded", "run_windows_sharded",
-           "run_windows_sharded_traced"]
+           "run_windows_sharded_traced", "failover_reown", "host_rehome"]
 
 _NONE = jnp.int32(-1)
+
+
+def host_rehome(x) -> jax.Array:
+    """Pull an array through the host so it sheds its committed device
+    placement — required when state crosses mesh topologies (a failover's
+    survivor mesh rejects buffers still committed to the dead one)."""
+    return jnp.asarray(np.asarray(x))
 
 
 def shard_extents(cfg: EngineConfig, n_shards: int) -> tuple[int, int]:
@@ -93,6 +102,55 @@ def sharded_store_view(cfg: EngineConfig, n_shards: int, state: StoreState
     return exists, val
 
 
+def failover_reown(cfg: EngineConfig, n_from: int, state: StoreState,
+                   survivors: tuple[int, ...]) -> tuple[StoreState, dict]:
+    """Re-own dead shards' slot partitions onto the survivors.
+
+    DINOMO-style elastic failover: when shards die, the surviving shards
+    reconstruct the lost partitions from replicas and re-partition the
+    store over ``len(survivors)`` shards (which must divide ``n_slots``/
+    ``heap_slots``).  The *logical* store — (exists, value) per slot plus
+    the slot-indexed ``ver``/``epoch``/``stranded`` planes — carries over
+    unchanged; only the physical heap packing is rebuilt, which is exactly
+    the freedom the sharded-equivalence contract already grants.  The
+    replicated credit table is global, so it survives for free — pass the
+    same ``CreditState`` to the post-failover runner.
+
+    Returns ``(new_state, recovery_io)`` where ``new_state`` feeds the
+    ``len(survivors)``-way runner and ``recovery_io`` is the control-plane
+    recovery bill (replica reads to reconstruct the lost partitions), kept
+    OUT of ``IOMetrics`` so the post-failover data-plane bill stays
+    bit-equal to a single-device run with the same CN drop mask (asserted
+    in ``benchmarks/recovery.py`` and ``tests/test_recovery.py``).
+    """
+    n_to = len(survivors)
+    per_f, _ = shard_extents(cfg, n_from)
+    shard_extents(cfg, n_to)
+    dead = sorted(set(range(n_from)) - set(survivors))
+    if len(set(survivors)) != n_to or any(s not in range(n_from)
+                                          for s in survivors):
+        raise ValueError(f"survivors {survivors!r} must be distinct shards "
+                         f"of the {n_from}-way store")
+    exists, val = sharded_store_view(cfg, n_from, state)
+    exists, val = np.asarray(exists), np.asarray(val)
+    keys = np.flatnonzero(exists)
+    new = sharded_populate(cfg, n_to, sharded_store_init(cfg, n_to),
+                           keys, val[keys])
+    new = dataclasses.replace(new, ver=host_rehome(state.ver),
+                              epoch=host_rehome(state.epoch),
+                              stranded=host_rehome(state.stranded))
+    lost_live = int(exists.reshape(n_from, per_f)[dead].sum()) if dead else 0
+    recovery_io = {
+        "dead_shards": dead,
+        "survivors": list(survivors),
+        # one replica READ per lost pointer slot + one per live lost value
+        "reown_reads": len(dead) * per_f + lost_live,
+        "reown_bytes": (len(dead) * per_f * cfg.ptr_bytes
+                        + lost_live * cfg.value_bytes),
+    }
+    return new, recovery_io
+
+
 def _psum_results(res: Results, axis: str) -> Results:
     """Reassemble exact per-op results across shards: non-owning shards emit
     each field's neutral element, so one psum (offset for the non-zero
@@ -108,12 +166,13 @@ def _psum_results(res: Results, axis: str) -> Results:
         wc_batch=psum(res.wc_batch - 1) + 1,
         retries=psum(res.retries),
         rank=psum(res.rank),
+        orphan_wait=psum(res.orphan_wait),
     )
 
 
 def _store_spec(axis: str) -> StoreState:
     return StoreState(ptr=P(axis), ver=P(axis), epoch=P(axis),
-                      heap=P(axis), heap_top=P(axis))
+                      heap=P(axis), heap_top=P(axis), stranded=P(axis))
 
 
 @functools.lru_cache(maxsize=None)
@@ -149,22 +208,24 @@ def _sharded_stream_fn(cfg: EngineConfig, mesh, axis: str,
     lcfg = dataclasses.replace(cfg, n_slots=per, heap_slots=hper)
     st_spec = _store_spec(axis)
 
-    def run(state, credits, stream):
+    def run(state, credits, stream, prev_alive):
         base = jax.lax.axis_index(axis).astype(jnp.int32) * per
 
         def step(carry, win):
-            st, cr = carry
-            batch, valid = win
+            st, cr, prev = carry
+            batch, valid, alive = win
             owned = (batch.keys >= base) & (batch.keys < base + per)
+            died = prev & ~alive
             st, cr, res, io = engine.apply_batch(
                 lcfg, st, cr, batch, valid=valid, owned=owned,
-                slot_base=base)
+                slot_base=base, alive=alive, died=died)
             out = (res, io, jnp.sum(cr.credit)) if traced else (res, io)
-            return (st, cr), out
+            return (st, cr, alive), out
 
         st = dataclasses.replace(state, heap_top=state.heap_top[0])
-        (st, cr), outs = jax.lax.scan(
-            step, (st, credits), (stream.batch, stream.valid))
+        (st, cr, _), outs = jax.lax.scan(
+            step, (st, credits, prev_alive),
+            (stream.batch, stream.valid, stream.alive))
         ress, ios = outs[0], outs[1]
         st = dataclasses.replace(st, heap_top=st.heap_top[None])
         if not io_per_window:
@@ -177,7 +238,7 @@ def _sharded_stream_fn(cfg: EngineConfig, mesh, axis: str,
 
     out_specs = (st_spec, P(), P(), P()) + ((P(),) if traced else ())
     fn = shard_map(run, mesh=mesh,
-                   in_specs=(st_spec, P(), P()),
+                   in_specs=(st_spec, P(), P(), P()),
                    out_specs=out_specs,
                    check_rep=False)
     return jax.jit(fn, donate_argnums=(0, 1))
@@ -199,7 +260,8 @@ def apply_batch_sharded(cfg: EngineConfig, mesh, state: StoreState,
 
 def run_windows_sharded(cfg: EngineConfig, mesh, state: StoreState,
                         credits, stream: WindowStream, *, axis: str = "data",
-                        io_per_window: bool = False
+                        io_per_window: bool = False,
+                        prev_alive: jax.Array | None = None
                         ) -> tuple[StoreState, object, Results, object]:
     """Sharded ``repro.core.runner.run_windows``: every window of ``stream``
     executes inside one ``lax.scan`` under one ``shard_map``.
@@ -210,15 +272,18 @@ def run_windows_sharded(cfg: EngineConfig, mesh, state: StoreState,
     so per-window ``Results``, per-window I/O (``io_per_window=True``), the
     credit table, and the store view are bit-identical to the single-device
     ``run_windows`` (tested in ``tests/test_runner.py``).  ``state`` and
-    ``credits`` are donated.
+    ``credits`` are donated.  ``prev_alive`` overrides the liveness row
+    assumed before window 0 (see ``runner._prev_alive``) so a run split
+    around a shard failover still strands crashes at the boundary.
     """
     return _sharded_stream_fn(cfg, mesh, axis, io_per_window)(
-        state, credits, stream)
+        state, credits, stream, _prev_alive(stream, prev_alive))
 
 
 def run_windows_sharded_traced(cfg: EngineConfig, mesh, state: StoreState,
                                credits, stream: WindowStream, *,
-                               axis: str = "data"
+                               axis: str = "data",
+                               prev_alive: jax.Array | None = None
                                ) -> tuple[StoreState, object, Results, object,
                                           jax.Array]:
     """Sharded ``repro.core.runner.run_windows_traced``: returns
@@ -227,4 +292,4 @@ def run_windows_sharded_traced(cfg: EngineConfig, mesh, state: StoreState,
     plane (identical on every shard), matching the single-device trace
     bit-exactly.  ``state`` and ``credits`` are donated."""
     return _sharded_stream_fn(cfg, mesh, axis, True, traced=True)(
-        state, credits, stream)
+        state, credits, stream, _prev_alive(stream, prev_alive))

@@ -5,9 +5,17 @@ Each worker FAAs a heartbeat epoch after every step (exactly the lock-epoch
 discipline: progress == epoch advance).  The monitor declares a worker dead
 when its epoch is stale for ``max_wait_s`` — the deadlock-detection rule —
 then shrinks the active set and signals a restore-from-checkpoint onto the
-surviving mesh (elastic restore, see ``repro.ckpt``).  Straggler mitigation:
-per-step deadline = ``straggler_factor`` x the EWMA step time; a worker that
-repeatedly misses it is excluded (same mechanism, softer penalty).
+surviving mesh (elastic restore, see ``repro.ckpt``).  A worker that never
+beats at all counts as stale from *monitor start*: silence is death, not
+innocence (the engine-path analogue is a CN that crashes before its first
+epoch FAA — ``repro.recovery``).
+
+Straggler mitigation: per-step deadline = ``straggler_factor`` x that
+worker's OWN EWMA step time; a worker that repeatedly misses it is excluded
+(same mechanism, softer penalty).  The EWMA is per-worker and deadline-
+missing samples are NOT folded into it — a fleet-global EWMA lets one slow
+worker inflate the shared average and mask itself, and folding the strike
+sample in lets a degrading worker ratchet its own deadline up.
 """
 from __future__ import annotations
 
@@ -30,34 +38,41 @@ class Heartbeat:
 
 class FleetMonitor:
     def __init__(self, n_workers: int, max_wait_s: float = 60.0,
-                 straggler_factor: float = 3.0, strikes: int = 3):
-        self.hb = {w: Heartbeat(w) for w in range(n_workers)}
+                 straggler_factor: float = 3.0, strikes: int = 3,
+                 now: float | None = None):
+        t0 = time.monotonic() if now is None else now
+        # never-beaten workers age from monitor start (epoch stays 0)
+        self.hb = {w: Heartbeat(w, t=t0) for w in range(n_workers)}
         self.max_wait_s = max_wait_s
         self.straggler_factor = straggler_factor
         self.strikes = strikes
         self._miss: dict[int, int] = dict.fromkeys(range(n_workers), 0)
-        self._ewma: float | None = None
+        self._ewma: dict[int, float | None] = dict.fromkeys(range(n_workers))
         self.excluded: set[int] = set()
 
     def beat(self, worker: int, step_time_s: float | None = None,
              now: float | None = None):
         self.hb[worker].beat(now)
-        if step_time_s is not None:
-            self._ewma = step_time_s if self._ewma is None \
-                else 0.9 * self._ewma + 0.1 * step_time_s
-            if self._ewma and step_time_s > self.straggler_factor * self._ewma:
-                self._miss[worker] += 1
-                if self._miss[worker] >= self.strikes:
-                    self.excluded.add(worker)   # straggler: route around it
-            else:
-                self._miss[worker] = 0
+        if step_time_s is None:
+            return
+        ewma = self._ewma[worker]
+        if ewma is not None and step_time_s > self.straggler_factor * ewma:
+            # a strike: count it, but keep the sample OUT of the EWMA so the
+            # deadline doesn't drift up toward the degraded pace
+            self._miss[worker] += 1
+            if self._miss[worker] >= self.strikes:
+                self.excluded.add(worker)    # straggler: route around it
+        else:
+            self._ewma[worker] = step_time_s if ewma is None \
+                else 0.9 * ewma + 0.1 * step_time_s
+            self._miss[worker] = 0
 
     def dead_workers(self, now: float | None = None) -> list[int]:
-        """Epoch stale for max_wait -> deadlock/death declared (§4.6)."""
+        """Epoch stale for max_wait -> deadlock/death declared (§4.6).
+        A worker that never beat is stale relative to monitor start."""
         now = time.monotonic() if now is None else now
         return [w for w, h in self.hb.items()
-                if w not in self.excluded and h.epoch > 0
-                and now - h.t > self.max_wait_s]
+                if w not in self.excluded and now - h.t > self.max_wait_s]
 
     def active_set(self, now: float | None = None) -> list[int]:
         dead = set(self.dead_workers(now))

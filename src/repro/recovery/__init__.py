@@ -1,0 +1,31 @@
+"""Crash recovery and elastic membership for the CIDER engine path (§4.6).
+
+Three planes, one failure model (DESIGN.md §8):
+
+* **liveness** (:mod:`repro.recovery.liveness`) — per-window CN alive
+  masks, threaded through the fused runner so dead CNs' ops drop at the
+  window boundary exactly as a real crash strands them;
+* **lock repair** — lives in ``repro.core.engine`` (step 5b): orphaned
+  pessimistic locks are detected by the next waiter via the §4.6 stale-
+  epoch read and broken with a repair CAS, billed through the exact verb
+  model (``IOMetrics.repair_cas``/``orphan_windows``,
+  ``Results.orphan_wait``);
+* **failover** — ``repro.dist.store.failover_reown`` re-owns dead shards'
+  slot partitions onto survivors; :mod:`repro.recovery.orchestrator`
+  splits a run around failover events and asserts nothing about the
+  data-plane bill changes.
+
+Scenario generators live in :mod:`repro.workloads.recovery`; the committed
+benchmark is ``BENCH_recovery.json`` (``benchmarks/recovery.py``).
+"""
+from repro.recovery.liveness import (LivenessSchedule, always_alive, crash,
+                                     elastic, rolling)
+from repro.recovery.orchestrator import (FailoverEvent, RecoveryRun,
+                                         run_recovery, run_recovery_sharded,
+                                         slice_stream, time_to_repair)
+
+__all__ = [
+    "LivenessSchedule", "always_alive", "crash", "rolling", "elastic",
+    "FailoverEvent", "RecoveryRun", "run_recovery", "run_recovery_sharded",
+    "slice_stream", "time_to_repair",
+]

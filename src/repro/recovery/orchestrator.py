@@ -1,0 +1,164 @@
+"""Recovery orchestration: drive a window stream through CN crashes and
+shard failovers, and summarize the recovery bill.
+
+``run_recovery`` is the single-device path: one fused ``run_windows`` scan
+with the liveness plane attached, returning the per-window I/O bill (the
+``repair_cas`` / ``orphan_windows`` trajectories are what time-to-repair is
+read from).
+
+``run_recovery_sharded`` is the elastic path: the stream is split at each
+:class:`FailoverEvent`, each segment runs under ``dist.store``'s sharded
+scan on the current membership, and ``dist.store.failover_reown``
+re-partitions the dead shards' slots onto the survivors between segments.
+The previous segment's last alive row is threaded into the next segment
+(``prev_alive``), so CN crashes at the failover boundary still strand locks.
+The concatenated per-window results and bill are bit-equal to a
+single-device ``run_recovery`` over the same stream — shard death never
+changes the data-plane bill, it only adds the control-plane ``recovery_io``
+(the assertion ``benchmarks/recovery.py`` and ``tests/test_recovery.py``
+make).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import runner
+from repro.core.credits import CreditState
+from repro.core.engine import Results, StoreState
+from repro.core.runner import WindowStream
+from repro.core.types import EngineConfig, IOMetrics
+from repro.dist import store as dstore
+from repro.launch.mesh import make_local_mesh
+
+__all__ = ["FailoverEvent", "RecoveryRun", "run_recovery",
+           "run_recovery_sharded", "slice_stream", "time_to_repair"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FailoverEvent:
+    """At ``window``, the complement of ``survivors`` dies and its slot
+    partition is re-owned: windows ``>= window`` run on ``len(survivors)``
+    shards.  ``survivors`` are shard ids of the *preceding* topology."""
+    window: int
+    survivors: tuple[int, ...]
+
+
+@dataclasses.dataclass
+class RecoveryRun:
+    """One orchestrated run: per-window results/bill plus the recovery
+    control-plane costs."""
+    results: Results       # (W, B) stacked
+    io: IOMetrics          # per-window bill, leaves (W,)
+    state: StoreState
+    credits: CreditState
+    valid: np.ndarray      # (W, B) post-drop validity (latency masking)
+    n_shards: int          # final shard count (1 on the single-device path)
+    recovery_io: list[dict]  # one dict per failover (dstore.failover_reown)
+
+    def io_sum(self) -> IOMetrics:
+        return jax.tree.map(lambda x: jnp.sum(x, axis=0), self.io)
+
+
+def slice_stream(stream: WindowStream, lo: int, hi: int) -> WindowStream:
+    """Windows ``[lo, hi)`` of a stream (every leaf's leading axis)."""
+    return jax.tree.map(lambda x: x[lo:hi], stream)
+
+
+def _post_drop_valid(stream: WindowStream) -> np.ndarray:
+    alive = np.asarray(stream.alive)
+    cn = np.asarray(stream.batch.cn)
+    w = alive.shape[0]
+    return np.asarray(stream.valid) & alive[np.arange(w)[:, None],
+                                            np.clip(cn, 0, alive.shape[1] - 1)]
+
+
+def run_recovery(cfg: EngineConfig, state: StoreState, credits: CreditState,
+                 stream: WindowStream) -> RecoveryRun:
+    """Single-device reference run (``state``/``credits`` are donated)."""
+    state, credits, res, io = runner.run_windows(cfg, state, credits, stream,
+                                                 io_per_window=True)
+    return RecoveryRun(results=res, io=io, state=state, credits=credits,
+                       valid=_post_drop_valid(stream), n_shards=1,
+                       recovery_io=[])
+
+
+def run_recovery_sharded(cfg: EngineConfig, n_shards: int, state: StoreState,
+                         credits: CreditState, stream: WindowStream,
+                         failovers: Sequence[FailoverEvent] = (),
+                         ) -> RecoveryRun:
+    """Sharded run with elastic membership (``state``/``credits`` donated).
+
+    ``state`` must be an ``n_shards``-way store (``sharded_store_init`` /
+    ``sharded_populate``); each failover's survivor count must divide
+    ``cfg.n_slots``/``cfg.heap_slots`` (``dstore.shard_extents``).
+    """
+    w = stream.shape[0]
+    evs = sorted(failovers, key=lambda e: e.window)
+    if any(not 0 < e.window <= w for e in evs):
+        raise ValueError(f"failover windows must lie in (0, {w}]")
+    bounds = [0] + [e.window for e in evs] + [w]
+    if len(set(bounds)) != len(bounds):
+        raise ValueError("failover windows must be distinct and interior")
+    ress, ios, recovery_io = [], [], []
+    prev_alive = None
+    for i, (lo, hi) in enumerate(zip(bounds[:-1], bounds[1:])):
+        if i > 0:
+            state, rio = dstore.failover_reown(cfg, n_shards, state,
+                                               evs[i - 1].survivors)
+            rio["window"] = evs[i - 1].window
+            recovery_io.append(rio)
+            n_shards = len(evs[i - 1].survivors)
+            # the replicated credit table survives failover for free, but it
+            # must shed the dead topology's device placement (like the store
+            # planes failover_reown carries) before the survivors' mesh
+            credits = jax.tree.map(dstore.host_rehome, credits)
+            if prev_alive is not None:
+                prev_alive = dstore.host_rehome(prev_alive)
+        seg = slice_stream(stream, lo, hi)
+        mesh = make_local_mesh(data=n_shards)
+        state, credits, res, io = dstore.run_windows_sharded(
+            cfg, mesh, state, credits, seg, io_per_window=True,
+            prev_alive=prev_alive)
+        prev_alive = seg.alive[-1]
+        ress.append(res)
+        ios.append(io)
+    # segment outputs are committed to different meshes — concat on host
+    cat = lambda *xs: np.concatenate([np.asarray(x) for x in xs],  # noqa: E731
+                                     axis=0)
+    return RecoveryRun(
+        results=jax.tree.map(cat, *ress) if len(ress) > 1 else ress[0],
+        io=jax.tree.map(cat, *ios) if len(ios) > 1 else ios[0],
+        state=state, credits=credits, valid=_post_drop_valid(stream),
+        n_shards=n_shards, recovery_io=recovery_io)
+
+
+def time_to_repair(io: IOMetrics, crash_window: int | None) -> dict:
+    """Repair timeline out of a per-window bill.
+
+    ``windows_to_repair``: windows from the first crash until the last
+    repair activity (a break CAS fired, or an orphaned lock still
+    outstanding at window end) — 1 means every strand was broken within the
+    crash window itself.  ``stranded_final`` counts locks still orphaned at
+    stream end: lazily-repaired slots nobody locked again (harmless to
+    optimistic traffic — CIDER's case — but reported, not hidden).
+    """
+    rc = np.asarray(io.repair_cas)
+    ow = np.asarray(io.orphan_windows)
+    if crash_window is None:
+        return {"windows_to_repair": 0, "repair_cas": int(rc.sum()),
+                "orphan_slot_windows": int(ow.sum()), "stranded_final": 0}
+    act = np.flatnonzero((rc > 0) | (ow > 0))
+    act = act[act >= crash_window]
+    last = int(act[-1]) if act.size else crash_window - 1
+    return {
+        "windows_to_repair": max(last - crash_window + 1, 0),
+        "repair_cas": int(rc.sum()),
+        "orphan_slot_windows": int(ow.sum()),
+        "stranded_final": int(ow[-1]),
+    }

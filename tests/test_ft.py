@@ -1,0 +1,75 @@
+"""FleetMonitor contracts (launcher-level §4.6): a worker that never beats
+is dead relative to monitor start, stragglers are judged against their OWN
+EWMA (deadline-missing samples never fold in), and the active set shrinks
+and regrows elastically."""
+from __future__ import annotations
+
+from repro.ft.failures import FleetMonitor
+
+
+def test_dead_at_start_without_any_beat():
+    m = FleetMonitor(3, max_wait_s=60.0, now=0.0)
+    assert m.dead_workers(now=59.0) == []
+    # silence since monitor start counts as staleness — not innocence
+    assert m.dead_workers(now=61.0) == [0, 1, 2]
+
+
+def test_beat_revives_and_staleness_redeclares():
+    m = FleetMonitor(3, max_wait_s=60.0, now=0.0)
+    m.beat(1, now=30.0)
+    assert m.dead_workers(now=61.0) == [0, 2]
+    assert m.active_set(now=61.0) == [1]
+    # worker 1 goes silent for max_wait after its last beat -> dead again
+    assert 1 in m.dead_workers(now=91.0)
+
+
+def test_straggler_uses_own_ewma_and_excludes_after_strikes():
+    m = FleetMonitor(2, max_wait_s=1e9, now=0.0)
+    for i in range(10):
+        m.beat(0, step_time_s=1.0, now=float(i))
+        m.beat(1, step_time_s=1.0, now=float(i))
+    # worker 1 degrades to 10x; worker 0 stays at pace
+    for i in range(3):
+        m.beat(0, step_time_s=1.0, now=10.0 + i)
+        m.beat(1, step_time_s=10.0, now=10.0 + i)
+    assert m.excluded == {1}
+    assert m.active_set(now=13.0) == [0]
+
+
+def test_strike_samples_do_not_inflate_the_ewma():
+    """The old fleet-global EWMA absorbed the slow samples, so a degrading
+    worker raised its own deadline and masked itself.  Per-worker EWMA with
+    strike samples kept out must keep striking at the old pace."""
+    m = FleetMonitor(1, now=0.0)
+    m.beat(0, step_time_s=1.0, now=0.0)
+    m.beat(0, step_time_s=10.0, now=1.0)        # strike 1
+    assert m._ewma[0] == 1.0                    # sample NOT folded in
+    m.beat(0, step_time_s=10.0, now=2.0)        # still 10 > 3 * 1.0
+    m.beat(0, step_time_s=10.0, now=3.0)        # third strike
+    assert m.excluded == {0}
+
+
+def test_fast_sample_resets_strikes():
+    m = FleetMonitor(1, strikes=3, now=0.0)
+    m.beat(0, step_time_s=1.0, now=0.0)
+    m.beat(0, step_time_s=10.0, now=1.0)
+    m.beat(0, step_time_s=10.0, now=2.0)
+    m.beat(0, step_time_s=1.0, now=3.0)         # recovered: strikes reset
+    m.beat(0, step_time_s=10.0, now=4.0)
+    m.beat(0, step_time_s=10.0, now=5.0)
+    assert m.excluded == set()
+
+
+def test_one_slow_worker_does_not_mask_itself_or_others():
+    """Regression for the shared-EWMA bug: worker 1's slowness must neither
+    raise worker 0's deadline nor its own."""
+    m = FleetMonitor(2, now=0.0)
+    m.beat(0, step_time_s=1.0, now=0.0)
+    m.beat(1, step_time_s=100.0, now=0.0)       # first sample seeds its OWN ewma
+    # worker 0's 2.0s step is fine against ITS ewma (2 < 3*1), even though
+    # worker 1's ewma is 100
+    m.beat(0, step_time_s=2.0, now=1.0)
+    assert m._miss[0] == 0
+    # worker 1 returning to 100s steps is on-pace for worker 1
+    m.beat(1, step_time_s=100.0, now=1.0)
+    assert m._miss[1] == 0

@@ -1,0 +1,277 @@
+"""Crash-recovery subsystem contracts (``repro.recovery`` + engine step 5b):
+the liveness plane drops dead CNs' ops at the window boundary, orphaned
+locks are repaired deterministically with the §4.6 mode asymmetry (MCS
+strands a chain, CIDER/SPIN one lock per key), the 4-way failover bill is
+bit-equal to the single-device drop-mask run, and modeled latency grows
+monotonically with the lease."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import runner
+from repro.core.credits import CreditState, credit_init, credit_slot
+from repro.core.engine import apply_batch, populate, store_init, store_view
+from repro.core.simnet import SimParams
+from repro.core.types import EngineConfig, IOMetrics, OpBatch, OpKind, SyncMode
+from repro.dist import store as dstore
+from repro.recovery import (FailoverEvent, crash, elastic, rolling,
+                            run_recovery, run_recovery_sharded,
+                            time_to_repair)
+from repro.workloads.recovery import RECOVERY_SCENARIOS
+
+W, B, NK, NCN = 8, 128, 256, 16
+HEAP = NK + W * B
+
+
+def _cfg(mode):
+    return EngineConfig(n_slots=NK, heap_slots=HEAP, mode=mode)
+
+
+def _warm_credits(keys, table=64, amount=100):
+    credit = jnp.zeros((table,), jnp.int32).at[
+        credit_slot(jnp.asarray(keys, jnp.int32), table)].set(amount)
+    return CreditState(credit=credit, retry_record=jnp.zeros((table,), jnp.int32))
+
+
+def _hot_batch(n_cns=4, key=5):
+    """One UPDATE per CN on a single hot key (local WC cannot absorb it)."""
+    kinds = np.full(n_cns, OpKind.UPDATE, np.int32)
+    keys = np.full(n_cns, key, np.int32)
+    vals = np.arange(n_cns, dtype=np.int32)
+    return OpBatch.make(kinds, keys, vals, n_cns=n_cns)
+
+
+def _crash_masks(n_cns, dead):
+    alive = np.ones(n_cns, bool)
+    alive[list(dead)] = False
+    died = np.zeros(n_cns, bool)
+    died[list(dead)] = True
+    return jnp.asarray(alive), jnp.asarray(died)
+
+
+# ---------------------------------------------------------------------------
+# engine-level: the repair asymmetry and the stranding lifecycle
+# ---------------------------------------------------------------------------
+
+def test_mode_asymmetry_mcs_chain_vs_single_lock():
+    """Two CNs die queued on one key: MCS repairs the whole dead chain (2
+    break CASes), CIDER and SPIN repair the key's single lock word (1);
+    SPIN additionally burns lease polls; OSYNC is lock-free (0)."""
+    batch = _hot_batch(n_cns=4, key=5)
+    alive, died = _crash_masks(4, dead=[1, 2])
+    pk = np.arange(NK)
+    repair = {}
+    for mode in (SyncMode.OSYNC, SyncMode.SPIN, SyncMode.MCS, SyncMode.CIDER):
+        cfg = _cfg(mode)
+        st = populate(cfg, store_init(cfg), pk, pk)
+        credits = _warm_credits([5])   # CIDER: the hot key is pessimistic
+        _, _, res, io = apply_batch(cfg, st, credits, batch,
+                                    alive=alive, died=died)
+        repair[mode] = int(io.repair_cas)
+        # dropped ops never complete
+        assert not np.asarray(res.ok)[1] and not np.asarray(res.ok)[2]
+        if mode != SyncMode.OSYNC:
+            assert np.asarray(res.orphan_wait)[[0, 3]].min() > 0
+    assert repair[SyncMode.OSYNC] == 0
+    assert repair[SyncMode.MCS] == 2          # the dead chain
+    assert repair[SyncMode.CIDER] == 1        # one lock entry per queue
+    assert repair[SyncMode.SPIN] > repair[SyncMode.CIDER]  # + lease polls
+
+
+def test_dead_delete_strands_its_own_node():
+    """DELETEs are never locally combined on the live path (they lock
+    independently), so a CN dying with an UPDATE and a DELETE in flight on
+    the same key strands TWO MCS nodes, not one."""
+    kinds = np.array([OpKind.UPDATE, OpKind.DELETE,
+                      OpKind.UPDATE, OpKind.UPDATE], np.int32)
+    keys = np.full(4, 5, np.int32)
+    batch = OpBatch.make(kinds, keys, np.arange(4, dtype=np.int32), n_cns=2)
+    alive, died = _crash_masks(2, dead=[0])   # CN0 = lanes 0,1 (UPDATE+DELETE)
+    cfg = _cfg(SyncMode.MCS)
+    pk = np.arange(NK)
+    st = populate(cfg, store_init(cfg), pk, pk)
+    _, _, res, io = apply_batch(cfg, st, credit_init(64), batch,
+                                alive=alive, died=died)
+    assert int(io.repair_cas) == 2
+    # lane 2 is locally combined into lane 3 (same key, same CN) and never
+    # touches the lock; the surviving executor waits out both dead nodes
+    assert np.asarray(res.orphan_wait)[2:].tolist() == [0, 2]
+
+
+def test_deferred_strand_and_lazy_repair():
+    """A key whose only writers died has no waiter to break the lock: it
+    stays in ``StoreState.stranded`` (counted in ``orphan_windows``) until
+    the next locker arrives and repairs it."""
+    cfg = _cfg(SyncMode.MCS)
+    pk = np.arange(NK)
+    st = populate(cfg, store_init(cfg), pk, pk)
+    batch = _hot_batch(n_cns=4, key=7)
+    alive, died = _crash_masks(4, dead=[0, 1, 2, 3])   # everyone dies
+    st, _, res, io = apply_batch(cfg, st, credit_init(64), batch,
+                                 alive=alive, died=died)
+    assert int(io.repair_cas) == 0
+    assert int(io.orphan_windows) == 1        # one slot stranded at window end
+    assert int(st.stranded[7]) == 4           # the whole chain
+    assert not np.asarray(res.ok).any()
+    # next window: a live writer on the key repairs the chain lazily
+    batch2 = _hot_batch(n_cns=4, key=7)
+    live = jnp.ones(4, bool)
+    st2, _, res2, io2 = apply_batch(cfg, st, credit_init(64), batch2,
+                                    alive=live, died=jnp.zeros(4, bool))
+    assert int(io2.repair_cas) == 4
+    assert int(io2.orphan_windows) == 0
+    assert int(st2.stranded[7]) == 0
+    assert np.asarray(res2.orphan_wait).max() == 4
+
+
+def test_all_alive_masks_are_failure_free_bitexact():
+    """alive=ones / died=zeros must not change a single counter or result
+    bit versus the legacy no-liveness call."""
+    rng = np.random.default_rng(0)
+    kinds = rng.choice([OpKind.SEARCH, OpKind.INSERT, OpKind.UPDATE,
+                        OpKind.DELETE], size=B, p=(.3, .15, .4, .15))
+    keys = rng.integers(0, NK, B)
+    vals = rng.integers(0, 10_000, B)
+    batch = OpBatch.make(kinds.astype(np.int32), keys, vals, n_cns=NCN)
+    pk = np.arange(NK)
+    for mode in (SyncMode.OSYNC, SyncMode.CIDER):
+        cfg = _cfg(mode)
+        st = populate(cfg, store_init(cfg), pk, pk)
+        a = apply_batch(cfg, st, credit_init(64), batch)
+        b = apply_batch(cfg, st, credit_init(64), batch,
+                        alive=jnp.ones(NCN, bool), died=jnp.zeros(NCN, bool))
+        for x, y in zip(a, b):
+            for f in dataclasses.fields(x):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(x, f.name)),
+                    np.asarray(getattr(y, f.name)), err_msg=f.name)
+
+
+# ---------------------------------------------------------------------------
+# liveness schedules
+# ---------------------------------------------------------------------------
+
+def test_liveness_builders_contracts():
+    s = crash(W, NCN, dead_cns=[1, 3], at_window=2)
+    assert s.alive.shape == (W, NCN)
+    assert s.died()[0].sum() == 0                      # row 0: nothing in flight
+    assert s.died()[2, [1, 3]].all() and s.died()[3:].sum() == 0
+    assert s.first_crash_window() == 2
+    r = rolling(12, 4, down_windows=2, start=1, group=1)
+    assert (r.n_alive() <= 4).all() and r.alive[0].all()
+    # every CN goes down exactly down_windows windows (12 windows fit the
+    # full wave: start 1 + 4 groups * stagger 2 + down 2 <= 12)
+    assert (r.alive.shape[0] - r.alive.sum(0) == 2).all()
+    e = elastic(W, 4, events=[(2, [2, 3], True), (5, [0], False)],
+                initial_alive=[0, 1])
+    assert e.n_alive().tolist() == [2, 2, 4, 4, 4, 3, 3, 3]
+    assert e.died()[5, 0] and not e.died()[2].any()    # join strands nothing
+
+
+def test_dead_cn_ops_are_dropped_exactly_per_schedule():
+    ops, sched = RECOVERY_SCENARIOS["crash_storm"].generate(
+        W, B, NK, 16, NCN, seed=1, crash_window=3)
+    stream = runner.make_stream(ops.kinds, ops.keys, ops.values, n_cns=NCN,
+                                alive=sched.alive)
+    cfg = _cfg(SyncMode.MCS)
+    pk = np.arange(NK)
+    run = run_recovery(cfg, populate(cfg, store_init(cfg), pk, pk),
+                       credit_init(256), stream)
+    ok = np.asarray(run.results.ok)
+    dropped = ~sched.drop_mask(B)
+    assert dropped.any()
+    assert not ok[dropped].any()                # dead lanes never complete
+    np.testing.assert_array_equal(
+        run.valid, (np.asarray(ops.kinds) != OpKind.NOP) & ~dropped)
+
+
+# ---------------------------------------------------------------------------
+# orchestrated runs: determinism, failover equality, lease monotonicity
+# ---------------------------------------------------------------------------
+
+def test_orphan_repair_is_deterministic():
+    outs = []
+    for _ in range(2):
+        ops, sched = RECOVERY_SCENARIOS["crash_storm"].generate(
+            W, B, NK, 16, NCN, seed=9, crash_window=3)
+        stream = runner.make_stream(ops.kinds, ops.keys, ops.values,
+                                    n_cns=NCN, alive=sched.alive)
+        cfg = _cfg(SyncMode.CIDER)
+        pk = np.arange(NK)
+        run = run_recovery(cfg, populate(cfg, store_init(cfg), pk, pk),
+                           credit_init(256), stream)
+        outs.append(run)
+    for f in dataclasses.fields(IOMetrics):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(outs[0].io, f.name)),
+            np.asarray(getattr(outs[1].io, f.name)), err_msg=f.name)
+    np.testing.assert_array_equal(np.asarray(outs[0].results.orphan_wait),
+                                  np.asarray(outs[1].results.orphan_wait))
+    t = time_to_repair(outs[0].io, 3)
+    assert t["repair_cas"] > 0
+
+
+@pytest.mark.parametrize("mode", [SyncMode.MCS, SyncMode.CIDER])
+def test_failover_bill_equals_single_device_drop_mask_run(mode):
+    """Shards 1,3 die at the crash window and survivors re-own their slots:
+    the per-window bill, results, and final store view must be bit-equal to
+    the single-device run with the same CN drop mask."""
+    ops, sched = RECOVERY_SCENARIOS["crash_storm"].generate(
+        W, B, NK, 16, NCN, seed=3, crash_window=4)
+    cfg = _cfg(mode)
+    pk = np.arange(NK)
+
+    stream = runner.make_stream(ops.kinds, ops.keys, ops.values, n_cns=NCN,
+                                alive=sched.alive)
+    single = run_recovery(cfg, populate(cfg, store_init(cfg), pk, pk),
+                          credit_init(256), stream)
+
+    stream2 = runner.make_stream(ops.kinds, ops.keys, ops.values, n_cns=NCN,
+                                 alive=sched.alive)
+    sst = dstore.sharded_populate(cfg, 4, dstore.sharded_store_init(cfg, 4),
+                                  pk, pk)
+    sharded = run_recovery_sharded(cfg, 4, sst, credit_init(256), stream2,
+                                   failovers=[FailoverEvent(4, (0, 2))])
+    assert sharded.n_shards == 2
+    assert sharded.recovery_io[0]["dead_shards"] == [1, 3]
+    for f in dataclasses.fields(IOMetrics):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(single.io, f.name)),
+            np.asarray(getattr(sharded.io, f.name)),
+            err_msg=f"IOMetrics.{f.name}")
+    for f in dataclasses.fields(single.results):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(single.results, f.name)),
+            np.asarray(getattr(sharded.results, f.name)),
+            err_msg=f"Results.{f.name}")
+    ex1, v1 = store_view(single.state)
+    ex2, v2 = dstore.sharded_store_view(cfg, 2, sharded.state)
+    np.testing.assert_array_equal(np.asarray(ex1), np.asarray(ex2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+
+def test_lease_expiry_latency_is_monotone():
+    """p99 must grow strictly with the lease while orphan waits exist —
+    the knob the operator trades detection speed against false repairs."""
+    ops, sched = RECOVERY_SCENARIOS["crash_storm"].generate(
+        W, B, NK, 16, NCN, seed=5, crash_window=3)
+    cfg = _cfg(SyncMode.MCS)
+    pk = np.arange(NK)
+    stream = runner.make_stream(ops.kinds, ops.keys, ops.values, n_cns=NCN,
+                                alive=sched.alive)
+    run = run_recovery(cfg, populate(cfg, store_init(cfg), pk, pk),
+                       credit_init(256), stream)
+    assert np.asarray(run.results.orphan_wait).max() > 0
+    kinds = np.asarray(ops.kinds)
+    p99s = []
+    for lease in (64, 256, 1024):
+        p = dataclasses.replace(SimParams(), lease_us=lease)
+        lat = runner.modeled_latency(cfg, kinds, run.results, p,
+                                     valid=run.valid)
+        p99s.append(runner.latency_stats(lat).p99_us)
+    assert p99s[0] < p99s[1] < p99s[2]

@@ -269,7 +269,8 @@ def test_modeled_throughput_iops_and_bandwidth_bounds():
     p = SimParams()
     z = jnp.zeros((), jnp.int32)
     io = IOMetrics(reads=jnp.int32(3200), writes=z, cas=z, faa=z, cn_msgs=z,
-                   mn_bytes=jnp.int32(100), retries=z, combined=z, executed=z)
+                   mn_bytes=jnp.int32(100), retries=z, combined=z, executed=z,
+                   repair_cas=z, orphan_windows=z)
     m = runner.modeled_throughput(io, p, n_ops=1000)
     # 3200 verbs / 32 per us = 100 us -> 10 ops/us = 10 Mops/s, IOPS-bound
     assert m["bound"] == "iops"

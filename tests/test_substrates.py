@@ -163,3 +163,18 @@ def test_sim_deadlock_recovery():
     r = run_sim(p, SyncMode.MCS, streams, 16)
     assert r.deadlocks >= 1, "deadlock repair should have fired"
     assert r.ops_done > 100, "system should keep making progress after repair"
+
+
+@pytest.mark.slow
+def test_sim_multi_lane_crash_recovery():
+    """§4.6 with a multi-CN crash: a SET of lanes dies at one tick
+    (``SimParams.fail_lanes``); the one-key queue must be repaired past
+    every dead lane's ticket (>= one repair per dead lane) and the
+    survivors keep completing."""
+    base = dict(n_lanes=64, ticks=6144, max_ops=512, fail_tick=600,
+                max_wait=512, lanes_per_cn=1, local_wc=False)
+    p = SimParams(**base, fail_lanes=(3, 5, 9))
+    streams = make_streams(p, WORKLOADS["write-only"], 1)
+    r = run_sim(p, SyncMode.MCS, streams, 16)
+    assert r.deadlocks >= 3, "each dead lane's ticket needs a repair"
+    assert r.ops_done > 100, "survivors should keep making progress"
