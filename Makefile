@@ -1,8 +1,8 @@
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test test-fast bench-smoke bench-scenarios-smoke \
-    bench-recovery-smoke check-regression lint
+.PHONY: test test-fast bench-smoke bench-ycsb-smoke bench-scenarios-smoke \
+    bench-recovery-smoke check-regression lint docs-check
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -14,13 +14,20 @@ test-fast:
 	python -m pytest -x -q tests/test_engine.py tests/test_runner.py \
 	    tests/test_dist.py tests/test_dist_store.py tests/test_stores.py \
 	    tests/test_workloads.py tests/test_dynamic.py tests/test_kernels.py \
-	    tests/test_recovery.py tests/test_ft.py
+	    tests/test_recovery.py tests/test_ft.py tests/test_scan.py \
+	    tests/test_ycsb_suite.py
 
 # tiny engine benchmark on the fused runner -> BENCH_engine.fast.json
 # (the committed full-size baseline BENCH_engine.json is regenerated with
 #  `python -m benchmarks.run --only engine_json`, no --fast)
 bench-smoke:
 	python -m benchmarks.run --only engine_json --fast
+
+# YCSB core suite (A-F) x SyncMode x {single, 4-way} -> BENCH_ycsb.fast.json,
+# including the sharded-scan bill-equality assertion (committed full-size
+# baseline: `python -m benchmarks.run --only ycsb_json`, no --fast)
+bench-ycsb-smoke:
+	python -m benchmarks.run --only ycsb_json --fast
 
 # dynamic-contention scenario matrix -> BENCH_scenarios.fast.json
 # (committed full-size baseline: `python -m benchmarks.scenarios`, no --fast)
@@ -33,12 +40,18 @@ bench-scenarios-smoke:
 bench-recovery-smoke:
 	python -m benchmarks.recovery --fast
 
-# perf-regression gate over the three fast JSONs (CI fails on >10% CIDER
+# perf-regression gate over the four fast JSONs (CI fails on >10% CIDER
 # modeled-mops drop, on CIDER losing the paper's mode ordering, or on CIDER
 # losing its recovery-overhead lead); depends on the smoke targets so it
 # never gates against stale JSONs
-check-regression: bench-smoke bench-scenarios-smoke bench-recovery-smoke
+check-regression: bench-smoke bench-ycsb-smoke bench-scenarios-smoke \
+    bench-recovery-smoke
 	python -m benchmarks.check_regression
+
+# docs gate: markdown link check over README/DESIGN/docs/ + every
+# `DESIGN.md §N` reference cited in source docstrings must exist
+docs-check:
+	python tools/check_docs.py
 
 lint:
 	@command -v ruff >/dev/null 2>&1 \

@@ -6,10 +6,12 @@ fixed) would merge green.  Now CI fails when either
 
 * CIDER's ``modeled_mops`` drops more than ``--tolerance`` (default 10%)
   below the committed baseline (``benchmarks/baselines.json``), in the
-  engine benchmark, any dynamic-contention scenario, or any recovery
-  scenario, or
+  engine benchmark, any YCSB core workload (A-F, both topologies), any
+  dynamic-contention scenario, or any recovery scenario, or
 * CIDER stops *leading* OSYNC/MCS/SPIN on ``modeled_mops`` anywhere — the
-  paper's headline ordering (§5), or
+  paper's headline ordering (§5).  Read/insert-only YCSB workloads (C, D)
+  bill identically under every mode, so *ties* pass; falling strictly
+  behind fails, or
 * CIDER loses a *recovery* lead: its orphan-repair verb bill
   (``repair_cas``) or post-crash modeled p99 exceeds MCS's or SPIN's in
   any recovery scenario (OSYNC is lock-free and strands nothing — it is
@@ -22,9 +24,10 @@ exact values with a tolerance band, not flaky wall-clock numbers.
     PYTHONPATH=src python -m benchmarks.check_regression
     PYTHONPATH=src python -m benchmarks.check_regression --update-baseline
 
-Run ``make bench-smoke bench-scenarios-smoke bench-recovery-smoke`` first
-(CI does); use ``--update-baseline`` after an intentional perf change to
-rewrite ``benchmarks/baselines.json`` from the current fast JSONs.
+Run ``make bench-smoke bench-ycsb-smoke bench-scenarios-smoke
+bench-recovery-smoke`` first (CI does); use ``--update-baseline`` after an
+intentional perf change to rewrite ``benchmarks/baselines.json`` from the
+current fast JSONs.
 """
 from __future__ import annotations
 
@@ -43,14 +46,20 @@ def _load(path: str, what: str) -> dict:
     if not os.path.exists(path):
         raise SystemExit(
             f"missing {what} {path!r} — run `make bench-smoke "
-            f"bench-scenarios-smoke` first")
+            f"bench-ycsb-smoke bench-scenarios-smoke bench-recovery-smoke` "
+            f"first")
     with open(path) as f:
         return json.load(f)
 
 
-def _collect(engine: dict, scenarios: dict, recovery: dict) -> dict:
+def _collect(engine: dict, scenarios: dict, recovery: dict,
+             ycsb: dict) -> dict:
     """{check_name: {mode: modeled_mops}} for every gated benchmark."""
     out = {"engine": {m: engine[m]["modeled_mops"] for m in MODES}}
+    for name, topos in ycsb["workloads"].items():
+        for topo, recs in topos.items():
+            out[f"ycsb/{name}/{topo}"] = {
+                m: recs[m]["modeled_mops"] for m in MODES}
     for name, topos in scenarios["scenarios"].items():
         for topo, recs in topos.items():
             out[f"scenario/{name}/{topo}"] = {
@@ -110,6 +119,7 @@ def main():
     ap.add_argument("--engine", default="BENCH_engine.fast.json")
     ap.add_argument("--scenarios", default="BENCH_scenarios.fast.json")
     ap.add_argument("--recovery", default="BENCH_recovery.fast.json")
+    ap.add_argument("--ycsb", default="BENCH_ycsb.fast.json")
     ap.add_argument("--baseline", default=DEFAULT_BASELINE)
     ap.add_argument("--tolerance", type=float, default=0.10,
                     help="allowed fractional drop of CIDER modeled_mops")
@@ -120,7 +130,8 @@ def main():
     engine = _load(args.engine, "engine benchmark")
     scenarios = _load(args.scenarios, "scenario benchmark")
     recovery = _load(args.recovery, "recovery benchmark")
-    actual = _collect(engine, scenarios, recovery)
+    ycsb = _load(args.ycsb, "ycsb suite benchmark")
+    actual = _collect(engine, scenarios, recovery, ycsb)
 
     if args.update_baseline:
         payload = {

@@ -15,6 +15,15 @@ data plane: its bill is asserted bit-equal to the single-device run.
 
     PYTHONPATH=src python examples/crash_recovery.py
 """
+import os
+
+# the 2-shard failover needs >= 2 host devices, pinned BEFORE jax init
+# (pin 4, matching the benchmark harnesses, so jit caches are shareable)
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=4").strip()
+
 import dataclasses
 
 import numpy as np

@@ -1,32 +1,54 @@
-"""Quickstart: the CIDER store in 30 lines.
+"""Quickstart: the paper's headline benchmark in one table.
 
-Creates a pointer-array KV store, runs contended write-intensive windows
-under each synchronization scheme (a few, so CIDER's contention-aware
-credits warm up), and prints the steady-state I/O bill — the paper's whole
-point in one table (O-SYNC pays O(n^2) retries; CIDER combines hot writes).
+Runs the full YCSB core suite (A-F — including E's SCAN range reads over
+the radix leaf runs, DESIGN.md §9) under each synchronization scheme and
+prints MN-IOPS-modeled throughput per cell: the "up to 6.6x under the
+YCSB benchmark" claim, reproduced at demo scale.  Expect CIDER ahead on
+the contended mixes (A, B, F), ahead on E (its cold scans are lock-free),
+and tied on the read/insert-only mixes (C, D bill identically in every
+mode).  Field semantics: docs/METRICS.md; committed full-size matrix:
+BENCH_ycsb.json.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
 from repro.core import runner
-from repro.core.types import SyncMode
-from repro.stores import PointerArray
-from repro.workloads.ycsb import WORKLOADS, generate_window_stream
+from repro.core.credits import credit_init
+from repro.core.engine import populate, store_init
+from repro.core.simnet import SimParams
+from repro.core.types import EngineConfig, OpKind, SyncMode
+from repro.workloads.ycsb import YCSB, generate_ycsb_stream
 
-N_KEYS, N_OPS, N_CNS, WINDOWS = 4096, 4096, 16, 5
+W, B, N_KEYS, N_SLOTS, N_CNS, SCAN_MAX = 6, 512, 1024, 2048, 64, 16
+MODES = [SyncMode.OSYNC, SyncMode.SPIN, SyncMode.MCS, SyncMode.CIDER]
 
-print(f"{'scheme':8s} {'MN IOPs':>9s} {'writes':>7s} {'CAS':>7s} "
-      f"{'retries':>8s} {'combined':>9s} {'wire KB':>8s}")
-for mode in SyncMode:
-    store = PointerArray.create(N_KEYS, mode=mode).populate(
-        np.arange(N_KEYS), np.arange(N_KEYS))
-    # all WINDOWS windows run in ONE fused scan (credits warm up on-device)
-    ops = generate_window_stream(WORKLOADS["write-intensive"], WINDOWS, N_OPS,
-                                 N_KEYS, n_clients=64)
-    stream = runner.make_stream(ops.kinds, ops.keys % N_KEYS, ops.values,
-                                n_cns=N_CNS)
-    store, res, ios = store.apply_stream(stream, io_per_window=True)
-    d = runner.io_window(ios, -1).as_dict()   # the steady-state window
-    print(f"{mode.name:8s} {d['mn_iops']:9d} {d['writes']:7d} {d['cas']:7d} "
-          f"{d['retries']:8d} {d['combined']:9d} {d['mn_bytes']/1024:8.1f}")
+p = SimParams()
+print(f"modeled Mops/s (MN-NIC-bound)   "
+      f"{'  '.join(f'{m.name:>7s}' for m in MODES)}")
+for name, spec in YCSB.items():
+    ops = generate_ycsb_stream(spec, W, B, N_KEYS, n_clients=64, seed=7)
+    stream = runner.make_stream(ops.kinds, ops.keys, ops.values, n_cns=N_CNS)
+    n_ops = int((ops.kinds != OpKind.NOP).sum())
+    cells = []
+    for mode in MODES:
+        # probe pass compiled only for E (scan_max=0 is bit-identical
+        # when the stream has no SCAN lanes, and much cheaper to trace)
+        cfg = EngineConfig(n_slots=N_SLOTS, heap_slots=N_SLOTS + W * B,
+                           mode=mode,
+                           scan_max=SCAN_MAX if spec.scan > 0 else 0)
+        store = populate(cfg, store_init(cfg), np.arange(N_KEYS),
+                         np.arange(N_KEYS))
+        # all W windows run in ONE fused scan (credits warm up on-device)
+        _, _, res, io = runner.run_windows(cfg, store, credit_init(1024),
+                                           stream)
+        cells.append(runner.modeled_throughput(io, p, n_ops)["modeled_mops"])
+    best = max(cells)
+    row = "  ".join(f"{c:7.3f}" + ("*" if c == best else " ") for c in cells)
+    label = {"A": "A 50r/50u", "B": "B 95r/5u", "C": "C 100r",
+             "D": "D 95r/5i latest", "E": "E 95scan/5i",
+             "F": "F 50r/50rmw"}[name]
+    print(f"{label:30s}  {row}")
+print("\n(*) column winner; C and D bill identically in every mode by "
+      "construction.\nFull-size committed matrix: BENCH_ycsb.json; field "
+      "reference: docs/METRICS.md.")

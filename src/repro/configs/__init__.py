@@ -2,6 +2,9 @@
 
 Each module defines CONFIG (the exact published dims) and SMOKE (a reduced
 same-family config for CPU smoke tests).  Select with ``--arch <id>``.
+
+DESIGN.md §5 (dry-run policy): the architecture registry the shape-cell grid
+enumerates.
 """
 from __future__ import annotations
 

@@ -1,5 +1,9 @@
 """deepseek-moe-16b — fine-grained MoE: 64 routed top-6 + 2 shared experts
-[arXiv:2401.06066]."""
+[arXiv:2401.06066].
+
+DESIGN.md §5 (dry-run policy): registry entry — exact published dims + smoke
+variant consumed by the shape-cell grid.
+"""
 import dataclasses
 from repro.models.config import ModelConfig
 

@@ -1,5 +1,9 @@
 """hubert-xlarge — audio encoder-only backbone; conv frontend is a STUB
-(input_specs supplies 49 Hz frame embeddings) [arXiv:2106.07447]."""
+(input_specs supplies 49 Hz frame embeddings) [arXiv:2106.07447].
+
+DESIGN.md §5 (dry-run policy): registry entry — exact published dims + smoke
+variant consumed by the shape-cell grid.
+"""
 import dataclasses
 from repro.models.config import ModelConfig
 

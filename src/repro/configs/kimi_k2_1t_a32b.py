@@ -1,5 +1,9 @@
 """kimi-k2-1t-a32b — trillion-param MoE: 384 routed experts top-8 + 1 shared
-[arXiv:2501.kimi2 paper table]."""
+[arXiv:2501.kimi2 paper table].
+
+DESIGN.md §5 (dry-run policy): registry entry — exact published dims + smoke
+variant consumed by the shape-cell grid.
+"""
 import dataclasses
 from repro.models.config import ModelConfig
 

@@ -1,4 +1,8 @@
-"""mamba2-1.3b — attention-free SSD (state-space duality) [arXiv:2405.21060]."""
+"""mamba2-1.3b — attention-free SSD (state-space duality) [arXiv:2405.21060].
+
+DESIGN.md §5 (dry-run policy): registry entry — exact published dims + smoke
+variant consumed by the shape-cell grid.
+"""
 import dataclasses
 from repro.models.config import ModelConfig
 

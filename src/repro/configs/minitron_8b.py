@@ -1,4 +1,8 @@
-"""minitron-8b — pruned nemotron, dense GQA, 256k vocab [arXiv:2407.14679]."""
+"""minitron-8b — pruned nemotron, dense GQA, 256k vocab [arXiv:2407.14679].
+
+DESIGN.md §5 (dry-run policy): registry entry — exact published dims + smoke
+variant consumed by the shape-cell grid.
+"""
 import dataclasses
 from repro.models.config import ModelConfig
 

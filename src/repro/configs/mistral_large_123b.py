@@ -1,4 +1,8 @@
-"""mistral-large-123b — dense 88L GQA [hf:mistralai/Mistral-Large-Instruct-2407]."""
+"""mistral-large-123b — dense 88L GQA [hf:mistralai/Mistral-Large-Instruct-2407].
+
+DESIGN.md §5 (dry-run policy): registry entry — exact published dims + smoke
+variant consumed by the shape-cell grid.
+"""
 import dataclasses
 from repro.models.config import ModelConfig
 

@@ -1,5 +1,9 @@
 """phi-3-vision-4.2b — phi3-mini backbone + CLIP patch STUB
-[hf:microsoft/Phi-3-vision-128k-instruct]."""
+[hf:microsoft/Phi-3-vision-128k-instruct].
+
+DESIGN.md §5 (dry-run policy): registry entry — exact published dims + smoke
+variant consumed by the shape-cell grid.
+"""
 import dataclasses
 from repro.models.config import ModelConfig
 

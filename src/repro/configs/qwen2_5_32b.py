@@ -1,4 +1,8 @@
-"""qwen2.5-32b — dense GQA with QKV bias [hf:Qwen/Qwen2.5-32B]."""
+"""qwen2.5-32b — dense GQA with QKV bias [hf:Qwen/Qwen2.5-32B].
+
+DESIGN.md §5 (dry-run policy): registry entry — exact published dims + smoke
+variant consumed by the shape-cell grid.
+"""
 import dataclasses
 from repro.models.config import ModelConfig
 

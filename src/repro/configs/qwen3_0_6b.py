@@ -1,6 +1,10 @@
 """qwen3-0.6b — dense GQA with qk_norm [hf:Qwen/Qwen3-0.6B].
 
-head_dim=128 (decoupled from d_model/n_heads, as in the HF config)."""
+head_dim=128 (decoupled from d_model/n_heads, as in the HF config).
+
+DESIGN.md §5 (dry-run policy): registry entry — exact published dims + smoke
+variant consumed by the shape-cell grid.
+"""
 import dataclasses
 from repro.models.config import ModelConfig
 

@@ -1,5 +1,9 @@
 """recurrentgemma-9b — hybrid RG-LRU + local attention, (rec, rec, attn)
-pattern, MQA kv=1, window 2048 [arXiv:2402.19427]."""
+pattern, MQA kv=1, window 2048 [arXiv:2402.19427].
+
+DESIGN.md §5 (dry-run policy): registry entry — exact published dims + smoke
+variant consumed by the shape-cell grid.
+"""
 import dataclasses
 from repro.models.config import ModelConfig
 

@@ -7,6 +7,9 @@
 * ``credits``  — contention-aware AIMD credit tables (Algorithm 1)
 * ``protocol``/``simnet``/``sim`` — the testbed-calibrated protocol simulator
 * ``oracle``   — sequential reference semantics
+
+DESIGN.md §1 (core layer): engine + credits + fused runner + protocol
+simulator behind one op vocabulary.
 """
 from repro.core.types import EngineConfig, IOMetrics, OpBatch, OpKind, SyncMode
 

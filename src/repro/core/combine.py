@@ -11,6 +11,9 @@ the *last* element of each run is the executor; everyone else is combined.
 
 This module is the pure-jnp reference implementation; ``repro.kernels.
 wc_combine`` provides the fused Pallas TPU kernel with an identical contract.
+
+DESIGN.md §2.1 (the combine primitive): one lexsort materializes every wait
+queue; reader ranks extend it to SCAN (§9.2).
 """
 from __future__ import annotations
 
@@ -20,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["CombinePlan", "plan_combine", "segment_last", "segment_counts",
-           "OpStats", "per_key_stats", "local_executors"]
+           "OpStats", "per_key_stats", "local_executors", "reader_waits"]
 
 
 @jax.tree_util.register_dataclass
@@ -113,6 +116,36 @@ def per_key_stats(keys: jax.Array, pos: jax.Array, mask: jax.Array) -> OpStats:
     retry_sum = jnp.sum(jnp.where(mask_s, plan.rank, 0))
     return OpStats(is_tail=is_tail, mult_of=mult_of, rank_of=rank_of,
                    retry_sum=retry_sum)
+
+
+def reader_waits(keys: jax.Array, pos: jax.Array, readers: jax.Array,
+                 writers: jax.Array) -> jax.Array:
+    """Per-reader count of lock-holding writers *ahead* of it in its queue.
+
+    SCAN support (DESIGN.md §9): a reader joins the per-key wait queue at its
+    op's batch position, so the number of masked ``writers`` on the same key
+    with a strictly smaller ``pos`` is exactly how many exclusive holders the
+    reader sits behind.  Precondition: no reader shares a (key, pos) pair
+    with a writer (readers inherit their parent op's position; a lane is
+    either a reader probe or a writer, never both on one slot).
+
+    Returns (N,) int32 — the wait rank for reader lanes, 0 elsewhere.
+    """
+    n = keys.shape[0]
+    mask = readers | writers
+    big = jnp.int32(2**31 - 1)
+    k = jnp.where(mask, keys, big)
+    order = jnp.lexsort((pos, k))
+    ks = k[order]
+    w_s = (writers & mask)[order].astype(jnp.int32)
+    is_first = jnp.concatenate([jnp.ones((1,), bool), ks[1:] != ks[:-1]])
+    seg = jnp.cumsum(is_first.astype(jnp.int32)) - 1
+    excl = jnp.cumsum(w_s) - w_s                   # writers before me, globally
+    seg_start = jax.ops.segment_min(jnp.arange(n, dtype=jnp.int32), seg,
+                                    num_segments=n)
+    waits_s = excl - excl[seg_start[seg]]          # writers before me, in-queue
+    out = jnp.zeros((n,), jnp.int32)
+    return out.at[order].set(jnp.where(readers[order], waits_s, 0))
 
 
 def local_executors(keys: jax.Array, cn: jax.Array, pos: jax.Array,

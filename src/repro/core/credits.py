@@ -17,6 +17,9 @@ The table is a fixed-size direct-mapped hash (the paper stores per-key 8B of
 metadata for hot keys only; a direct-mapped table gives the same O(1) cost
 with graceful aliasing for cold keys — collisions can only mis-route a key to
 a path that remains *correct*, only its cost changes; see §4.5.2).
+
+DESIGN.md §2 (engine conventions; replication rule §3.3): the per-key AIMD
+credit plane deciding optimistic vs pessimistic.
 """
 from __future__ import annotations
 

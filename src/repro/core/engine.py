@@ -33,6 +33,16 @@ Local WC (applied to every scheme, §5.1) first collapses same-(key, CN)
 writers to one effective writer; CIDER's global WC collapses same-key writers
 across CNs to one executor (§4.2.1).
 
+SCAN (range read over [key, key+count), DESIGN.md §9): when
+``EngineConfig.scan_max > 0``, each SCAN expands into up to ``scan_max``
+reader probes over its contiguous leaf-slot run (step 5c).  Probes join the
+per-key wait queues *as readers* at the scanning op's batch position — they
+observe exactly the per-slot state at that serialization point — and bill a
+per-mode traversal: OSYNC re-reads each leaf's version, SPIN lock/unlock-CASes
+every leaf (a CAS spinlock has no shared mode), MCS enqueues shared + releases
+per leaf, and CIDER consults the CN-local credit table so cold leaves are
+traversed lock-free (only credit-hot leaves pay shared-queue verbs).
+
 The shard_map path (``repro.dist.store``) partitions the store over the
 ``data`` mesh axis and calls ``apply_batch`` per shard with ``owned``/
 ``slot_base``: the data plane then covers only the shard's keys while the
@@ -97,6 +107,10 @@ class Results:
                             # waited a lease expiry on before its queue could
                             # repair them (§4.6); modeled latency charges
                             # lease_us + the repair RTTs per unit
+    rows: jax.Array         # (B,) int32 — SCAN rows found in [key, key+count)
+                            # at the op's serialization position (DESIGN.md
+                            # §9); 0 for point ops.  Sharded runs psum the
+                            # per-shard sub-run counts.
 
 
 def store_init(cfg: EngineConfig) -> StoreState:
@@ -235,6 +249,11 @@ def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
         valid = kinds != OpKind.NOP
     else:
         valid = valid & (kinds != OpKind.NOP)
+    if cfg.scan_max == 0:
+        # no probe capacity compiled in: SCAN lanes must not silently charge
+        # point-op I/O and return 0 rows — they are dropped here, and the
+        # point-op stores reject them loudly before ever reaching the engine
+        valid = valid & (kinds != OpKind.SCAN)
     # present: ops issued into this window (including ones whose CN crashes
     # mid-window — the orphan candidates); valid: ops that complete.
     present = valid
@@ -346,6 +365,7 @@ def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
     per_op_combined = jnp.zeros((b,), bool)
     per_op_batch = jnp.ones((b,), jnp.int32)
     per_op_rank = jnp.zeros((b,), jnp.int32)
+    per_op_rows = jnp.zeros((b,), jnp.int32)
 
     # INSERTs: optimistic CAS on the empty pointer in every mode (§4.2.2);
     # concurrent same-key INSERTs: exactly one wins, losers fail once.
@@ -505,6 +525,98 @@ def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
             mn_bytes += polls_lease * cfg.ptr_bytes
             per_op_retries = per_op_retries + lease_polls
 
+    # ---- 5c. SCAN reader probes (range reads, DESIGN.md §9) ---------------
+    # A SCAN(key, count) expands into `count` reader probes over the
+    # contiguous leaf-slot run [key, key+count), each joining its slot's wait
+    # queue *as a reader* at the scanning op's batch position.  The probes
+    # run in a second linearization pass alongside the window's writers —
+    # readers are identity transfer functions, so the pass observes exactly
+    # the per-slot state at the probe's serialization position and the main
+    # pass above is untouched.  Probes outside [slot_base, slot_base +
+    # n_slots) belong to another shard (or fall off the keyspace end): each
+    # shard counts its own sub-run and the dist psum reassembles the rows.
+    if cfg.scan_max > 0:
+        ns = cfg.scan_max
+        is_scan = (kinds == OpKind.SCAN) & valid
+        count = jnp.clip(values, 0, ns)               # count rides `values`
+        jj = jnp.arange(ns, dtype=jnp.int32)
+        pk = keys[:, None] + jj[None, :]              # (B, ns) global slots
+        p_loc = pk - base
+        p_in = (is_scan[:, None] & (jj[None, :] < count[:, None])
+                & (p_loc >= 0) & (p_loc < cfg.n_slots))
+        keys_p = pk.reshape(b * ns)
+        pos_p = jnp.broadcast_to(pos[:, None], (b, ns)).reshape(b * ns)
+        pv = p_in.reshape(b * ns)
+        keys_c = jnp.concatenate([keys, keys_p])
+        pos_c = jnp.concatenate([pos, pos_p])
+        kinds_c = jnp.concatenate(
+            [kinds, jnp.full((b * ns,), OpKind.SEARCH, jnp.int32)])
+        values_c = jnp.concatenate([values, jnp.zeros((b * ns,), jnp.int32)])
+        tvalid = jnp.concatenate([valid_o, pv])
+        plan_c = wc.plan_combine(keys_c, pos_c, tvalid)
+        pc = plan_c.perm
+        bc = b * (1 + ns)
+        e_tc, c_tc = _op_transfer(kinds_c[pc], values_c[pc])
+        v_sc = tvalid[pc]
+        e_tc = jnp.where(v_sc[:, None], e_tc,
+                         jnp.broadcast_to(jnp.array([0, 1], jnp.int32), (bc, 2)))
+        c_tc = jnp.where(v_sc[:, None], c_tc, jnp.full((bc, 2), _KEEP, jnp.int32))
+        incl_ec, incl_cc, _ = _segmented_scan(e_tc, c_tc, plan_c.is_first)
+        slot_c = jnp.clip(keys_c[pc] - base, 0, cfg.n_slots - 1)
+        ptr_c = state.ptr[slot_c]
+        e_init_c = ptr_c != NULL_PTR
+        v_init_c = jnp.where(e_init_c, state.heap[jnp.clip(ptr_c, 0)], _NONE)
+        prev_ec = jnp.roll(incl_ec, 1, axis=0)
+        prev_cc = jnp.roll(incl_cc, 1, axis=0)
+        e_bc, _ = _apply(prev_ec, prev_cc, e_init_c, v_init_c)
+        e_bc = jnp.where(plan_c.is_first, e_init_c, e_bc)
+        e_probe = jnp.zeros((bc,), bool).at[pc].set(e_bc & v_sc)
+        hit = e_probe[b:].reshape(b, ns) & p_in
+        per_op_rows = jnp.sum(hit.astype(jnp.int32), axis=1)
+        n_probes = s(pv)
+        n_rows = s(hit)
+        # base bill: one leaf-entry READ per probed slot + one value READ per
+        # row found (every mode traverses the same run)
+        reads += n_probes + n_rows
+        mn_bytes += n_probes * cfg.ptr_bytes + n_rows * cfg.value_bytes
+        if cfg.mode == SyncMode.OSYNC:
+            # optimistic traversal must re-read each leaf's version to
+            # validate against concurrent pointer swaps (§2.2's cost, paid
+            # per leaf whether or not anyone wrote)
+            reads += n_probes
+            mn_bytes += n_probes * cfg.ptr_bytes
+        elif cfg.mode == SyncMode.SPIN:
+            # a CAS spinlock has no shared mode: lock + unlock CAS per leaf
+            cas += 2 * n_probes
+            mn_bytes += 2 * n_probes * cfg.ptr_bytes
+        elif cfg.mode == SyncMode.MCS:
+            # lock-shared traversal: shared-mode enqueue CAS + release FAA
+            # per leaf (the epoch heartbeat plane tracks exclusive holders
+            # only — the reader FAA is billed, not recorded)
+            cas += n_probes
+            faa += n_probes
+            mn_bytes += n_probes * (cfg.ptr_bytes + 8)
+        else:  # CIDER: consult the CN-local credit table (free) — cold
+               # leaves are traversed lock-free like OSYNC *without* the
+               # re-read (the table certifies no concurrent pessimistic
+               # writer), hot leaves join the queue in shared mode
+            cslot_p = credit_slot(keys_p, credits.credit.shape[0])
+            hot_p = pv & (credits.credit[cslot_p] > 0)
+            n_hot = s(hot_p)
+            cas += n_hot
+            faa += n_hot
+            mn_bytes += n_hot * (cfg.lock_bytes + 8)
+        if cfg.mode != SyncMode.OSYNC:
+            # wait rank of the anchor-leaf reader behind exclusive holders
+            # (queue order == batch position now includes reader ranks)
+            lockw = loc_exec_pess | is_delete
+            waits = wc.reader_waits(
+                keys_c, pos_c,
+                jnp.concatenate([jnp.zeros((b,), bool), pv]),
+                jnp.concatenate([lockw, jnp.zeros((b * ns,), bool)]))
+            per_op_rank = jnp.where(p_in[:, 0], waits[b:].reshape(b, ns)[:, 0],
+                                    per_op_rank)
+
     # ---- 6. credit feedback (§4.3, Algorithm 1 lines 13-22) ---------------
     # Like the decision, feedback runs on the FULL window so replicated
     # credit tables stay identical across shards; when unsharded the full
@@ -546,11 +658,14 @@ def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
                            stranded=stranded)
     # unsort results
     ok = jnp.zeros((b,), bool).at[perm].set(ok_s)
+    # SCAN succeeds when it found any row; per-shard partial counts OR
+    # together under the dist psum exactly as the totals add
+    ok = ok | (per_op_rows > 0)
     value = jnp.full((b,), _NONE, jnp.int32).at[perm].set(val_s)
     res = Results(ok=ok, value=value, pessimistic=pess,
                   combined=per_op_combined, wc_batch=per_op_batch,
                   retries=per_op_retries, rank=per_op_rank,
-                  orphan_wait=per_op_orphan)
+                  orphan_wait=per_op_orphan, rows=per_op_rows)
     io = IOMetrics(reads=reads, writes=writes, cas=cas, faa=faa,
                    cn_msgs=cn_msgs, mn_bytes=mn_bytes, retries=retries_total,
                    combined=combined_total, executed=executed,

@@ -3,6 +3,9 @@
 Applies ops strictly in batch-position order against a dict — the ground
 truth that every synchronization mode must be equivalent to (linearizability
 of the window with queue order == batch position).
+
+DESIGN.md §2.2 (serialization contract): the batch-position-ordered ground
+truth every SyncMode must match, SCAN included (§9.2).
 """
 from __future__ import annotations
 
@@ -16,13 +19,20 @@ __all__ = ["OracleStore"]
 class OracleStore:
     def __init__(self):
         self.kv: dict[int, int] = {}
+        self.rows = np.zeros(0, np.int64)   # per-op SCAN row counts, last apply
 
     def populate(self, keys, values):
         for k, v in zip(np.asarray(keys).tolist(), np.asarray(values).tolist()):
             self.kv[int(k)] = int(v)
 
-    def apply(self, kinds, keys, values, valid=None):
-        """Returns (ok[B], value[B]) per op, mutating the store."""
+    def apply(self, kinds, keys, values, valid=None, scan_max=None):
+        """Returns (ok[B], value[B]) per op, mutating the store.
+
+        SCAN ops (count in ``values``, optionally clipped to ``scan_max`` —
+        the engine's static probe bound) leave ``value`` at -1 and record
+        their found-row counts in ``self.rows`` (B,), 0 for point ops, to
+        match ``engine.Results.rows``.
+        """
         kinds = np.asarray(kinds)
         keys = np.asarray(keys)
         values = np.asarray(values)
@@ -31,6 +41,7 @@ class OracleStore:
             valid = np.ones(b, bool)
         ok = np.zeros(b, bool)
         out = np.full(b, -1, np.int64)
+        self.rows = np.zeros(b, np.int64)
         for i in range(b):
             if not valid[i] or kinds[i] == OpKind.NOP:
                 continue
@@ -51,6 +62,11 @@ class OracleStore:
                 if k in self.kv:
                     ok[i] = True
                     del self.kv[k]
+            elif kinds[i] == OpKind.SCAN:
+                count = v if scan_max is None else min(v, int(scan_max))
+                rows = sum(1 for kk in range(k, k + count) if kk in self.kv)
+                self.rows[i] = rows
+                ok[i] = rows > 0
         return ok, out
 
     def view(self, n_slots):

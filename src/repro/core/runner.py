@@ -215,7 +215,7 @@ def modeled_throughput(io: IOMetrics, p: SimParams, n_ops: int
 
 
 def modeled_latency(cfg: EngineConfig, kinds, res: Results, p: SimParams,
-                    valid=None) -> np.ndarray:
+                    valid=None, scan_counts=None) -> np.ndarray:
     """Per-op modeled completion time in microseconds (host-side, numpy).
 
     Two additive components, mirroring ``repro.core.simnet``'s service model
@@ -240,9 +240,21 @@ def modeled_latency(cfg: EngineConfig, kinds, res: Results, p: SimParams,
       per dead chain node; CIDER/SPIN once per key — the repair asymmetry
       the recovery benchmark measures.
 
+    * **SCAN chains** (DESIGN.md §9) — a scan's leaf-run READs are
+      doorbell-batched (one round trip for the run, one for the found
+      values), so its chain is short while its *verb* footprint — which
+      feeds everyone's MN queueing — is per-leaf (``scan_counts``, the
+      per-op scan length; defaults to ``Results.rows`` when not given,
+      undercounting absent-row leaves).  Per mode: OSYNC adds the
+      validation re-read round; SPIN/MCS readers wait behind
+      ``Results.rank`` exclusive holders on the anchor leaf; CIDER's
+      cold scans skip the queue entirely and a credit-hot anchor waits
+      for at most its queue's ONE combined executor.
+
     Aggregate ``IOMetrics`` stay the *exact* bill; this per-op split is the
     documented approximation (locally-combined baseline writers are billed
-    as rank-0 writers, CN<->CN hops cost ``p.cn_rtt`` uncontended).  Works
+    as rank-0 writers, CN<->CN hops cost ``p.cn_rtt`` uncontended; a scan's
+    per-mode sync verbs are charged per anchor, not per leaf).  Works
     on flat ``(B,)`` or window-stacked ``(W, B)`` results; invalid lanes are
     NaN (``latency_stats`` ignores them).  When a liveness schedule dropped
     ops, pass the post-drop validity (``recovery.liveness`` provides it) so
@@ -263,6 +275,15 @@ def modeled_latency(cfg: EngineConfig, kinds, res: Results, p: SimParams,
     insert = kinds == OpKind.INSERT
     update = kinds == OpKind.UPDATE
     delete = kinds == OpKind.DELETE
+    scan = kinds == OpKind.SCAN
+    rows = np.asarray(res.rows).astype(np.float64)
+    if scan_counts is None:
+        counts = np.where(scan, rows, 0.0)
+    else:
+        # clip to the engine's static probe bound: the model must bill the
+        # leaves the engine actually traversed, not the requested length
+        counts = np.where(scan, np.minimum(
+            np.asarray(scan_counts, np.float64), float(cfg.scan_max)), 0.0)
     idx = float(cfg.index_read_iops)
     rtt, cnr = float(p.rtt), float(p.cn_rtt)
 
@@ -294,6 +315,22 @@ def modeled_latency(cfg: EngineConfig, kinds, res: Results, p: SimParams,
         chain = np.where(update & pess, idx + 4.0 + (m > 1), chain)
         extra = np.where(update & pess & (m > 1), 2.0 * cnr, extra)
 
+    # SCAN (DESIGN.md §9): leaf-run READ round + a value round when any row
+    # was found (doorbell-batched); readers wait behind `rank` exclusive
+    # holders on the anchor leaf — except CIDER, whose cold scans skip the
+    # queue and whose hot anchor waits for ONE combined executor
+    found = (rows > 0).astype(np.float64)
+    if cfg.mode == SyncMode.OSYNC:
+        chain = np.where(scan, idx + 2.0 + found, chain)       # + re-read round
+    elif cfg.mode == SyncMode.SPIN:
+        chain = np.where(scan, idx + 2.0 + found + 3.0 * rank, chain)
+    elif cfg.mode == SyncMode.MCS:
+        chain = np.where(scan, idx + 2.0 + found, chain)
+        extra = np.where(scan, rank * (3.0 * rtt + cnr), extra)
+    else:
+        chain = np.where(scan, idx + 1.0 + found
+                         + np.where(rank > 0, 4.0, 0.0), chain)
+
     # ---- MN NIC queueing: wait behind earlier ops' verbs in the window ----
     verbs = np.full(kinds.shape, idx, np.float64)
     verbs = np.where(search, idx + ok, verbs)
@@ -310,6 +347,15 @@ def modeled_latency(cfg: EngineConfig, kinds, res: Results, p: SimParams,
     elif cfg.mode == SyncMode.CIDER:
         verbs = np.where(update & pess & comb, idx + 2.0, verbs)   # CAS + FAA
         verbs = np.where(update & pess & ~comb, idx + 4.0 + (m > 1), verbs)
+    # SCAN verb footprint is per-leaf even though its chain is batched:
+    # leaf READs + found-value READs + the per-mode traversal verbs
+    scan_base = idx + counts + rows
+    if cfg.mode == SyncMode.OSYNC:
+        verbs = np.where(scan, scan_base + counts, verbs)      # version re-reads
+    elif cfg.mode in (SyncMode.SPIN, SyncMode.MCS):
+        verbs = np.where(scan, scan_base + 2.0 * counts, verbs)
+    else:  # CIDER: hot-anchor proxy for the credit-hot leaf subset
+        verbs = np.where(scan, scan_base + 2.0 * (rank > 0), verbs)
     verbs = np.where(valid, verbs, 0.0)
     backlog = np.cumsum(verbs, axis=-1) - verbs
     # orphaned-lock lease waits: each unit is one lease expiry + the

@@ -4,6 +4,9 @@
 ``repro.core.protocol`` over ``SimParams.ticks`` microseconds and returns the
 throughput / latency / I/O statistics that the paper's evaluation plots
 (Figs 1-5, 11-15, 20-21).
+
+DESIGN.md §4 (protocol simulator): drives the per-lane state machines and
+reduces their histories to the paper's figures.
 """
 from __future__ import annotations
 

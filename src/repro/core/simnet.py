@@ -13,6 +13,9 @@ Models the disaggregated-memory fabric the paper measures on (CloudLab,
   design point of shifting polling off the memory pool.
 
 One tick == 1 microsecond; one-sided RDMA RTT ~2 us.
+
+DESIGN.md §4 (protocol simulator): the MN-NIC token-bucket cost model shared
+by the sim and the modeled metrics (§6-§7).
 """
 from __future__ import annotations
 

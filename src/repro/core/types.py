@@ -1,7 +1,10 @@
 """Core types shared by the CIDER dataplane engine and the protocol simulator.
 
 The paper's op vocabulary (§2.2): SEARCH / INSERT / UPDATE / DELETE over a
-store of data pointers; IDU = {INSERT, UPDATE, DELETE}.  One-sided RDMA verbs
+store of data pointers; IDU = {INSERT, UPDATE, DELETE}.  SCAN (key + count)
+extends it with the range read YCSB E is built from (DESIGN.md §9) — a
+reader over a contiguous leaf-slot run, representable only on a
+range-capable index.  One-sided RDMA verbs
 (§2.1): READ / WRITE / CAS / FAA / masked-CAS (get-and-set).  We meter each
 verb class separately because the paper's bottleneck argument is on
 memory-node (MN) NIC *IOPS*, with client-to-client (CN<->CN) messages
@@ -32,6 +35,11 @@ class OpKind(enum.IntEnum):
     UPDATE = 2
     DELETE = 3
     NOP = 4      # padding
+    SCAN = 5     # range read: (key, count) — count rides OpBatch.values.
+                 # Resolvable only by a range-capable (radix) index: the key
+                 # run [key, key+count) must be a contiguous leaf-slot run
+                 # (stores/smart_art.py); hash indexes reject it.  YCSB E's
+                 # op; rows found come back in Results.rows.
 
 
 class Verb(enum.IntEnum):
@@ -161,3 +169,10 @@ class EngineConfig:
     # repair CAS succeeds (MCS/CIDER waiters wait locally — ShiftLock's
     # design point — so only SPIN pays MN verbs for the lease).
     lease_poll_rounds: int = 16
+    # SCAN support (DESIGN.md §9): static per-op leaf-run bound.  0 disables
+    # the reader-probe pass entirely — the engine then compiles to exactly
+    # the pre-SCAN program, so point-op-only stores pay nothing.  A SCAN's
+    # count is clipped to this bound by the stores/workloads; the engine
+    # expands each SCAN into `scan_max` reader probes that join the per-key
+    # wait queues at the scanning op's batch position.
+    scan_max: int = 0

@@ -7,6 +7,9 @@ step (error feedback), so the *time-averaged* applied gradient is unbiased:
 the bias of round-to-nearest is re-injected instead of lost, and the 4x
 traffic reduction costs no asymptotic accuracy (tests check the running mean
 converges to the true gradient).
+
+DESIGN.md §3.4 (cross-node traffic): int8 + error-feedback gradient
+compression, time-averaged unbiased.
 """
 from __future__ import annotations
 

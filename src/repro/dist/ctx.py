@@ -6,6 +6,9 @@ activations.  Without an installed mesh it is an exact no-op, so every model
 runs unchanged on a single CPU device; with a mesh it lowers to
 ``with_sharding_constraint`` using the logical-axis rules of
 ``repro.dist.sharding`` (divisibility-checked, replication fallback).
+
+DESIGN.md §3.2 (logical-axis rules): mesh context + in-line activation
+sharding constraints.
 """
 from __future__ import annotations
 

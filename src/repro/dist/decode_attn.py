@@ -7,6 +7,9 @@ over one mesh axis, each shard computes its local scores in one pass, and
 exactly three collectives (pmax for the running max, psum for the normalizer
 and the weighted values) produce the identical result — the communication
 pattern the reference only reaches after XLA's partitioner gets it right.
+
+DESIGN.md §3 (distribution layer): shard_map decode attention over a
+sequence-sharded KV cache, exact vs the SPMD reference.
 """
 from __future__ import annotations
 

@@ -8,6 +8,9 @@ path groups by id with the same sort/segment primitive as
 ``core.combine.plan_combine`` and emits ONE summed row per unique id, so the
 cross-node write traffic is proportional to *unique* ids (heavy-tailed token
 distributions make this a large constant factor, exactly Fig 4's argument).
+
+DESIGN.md §3.4 (cross-node traffic; the §2.1 combine primitive applied to
+training): per-unique-id combined gradient writes.
 """
 from __future__ import annotations
 

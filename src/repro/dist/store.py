@@ -16,6 +16,9 @@ size that divides ``n_slots``/``heap_slots``, the logical store view
 table, and every ``IOMetrics`` counter are identical to the single-device
 engine, for all four ``SyncMode``s.  Only the physical heap layout differs
 (each shard packs its own commits).
+
+DESIGN.md §3.3 (sharded store): slot-partitioned StoreState under shard_map,
+bit-equal to the single device — cross-shard SCAN runs included (§9.3).
 """
 from __future__ import annotations
 
@@ -167,6 +170,9 @@ def _psum_results(res: Results, axis: str) -> Results:
         retries=psum(res.retries),
         rank=psum(res.rank),
         orphan_wait=psum(res.orphan_wait),
+        # each shard counts the rows of its own sub-run of a cross-shard
+        # SCAN (run split at partition boundaries, DESIGN.md §9)
+        rows=psum(res.rows),
     )
 
 

@@ -16,6 +16,9 @@ worker's OWN EWMA step time; a worker that repeatedly misses it is excluded
 missing samples are NOT folded into it — a fleet-global EWMA lets one slow
 worker inflate the shared average and mask itself, and folding the strike
 sample in lets a degrading worker ratchet its own deadline up.
+
+DESIGN.md §8 (crash recovery): launcher-fleet heartbeat/straggler monitor —
+the §4.6 epoch idea at training scale.
 """
 from __future__ import annotations
 

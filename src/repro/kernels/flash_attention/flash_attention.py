@@ -8,6 +8,9 @@ kv heads are never materialized per-q-head in HBM.
 Block shapes are (block_q, head_dim) / (block_k, head_dim) VMEM tiles;
 head_dim is expected 128-aligned (pad if not) and block_q/block_k multiples
 of the 8x128 VPU lanes.
+
+DESIGN.md §1 (kernels layer): fused blockwise-softmax attention behind
+models/attention; exact against ref.py.
 """
 from __future__ import annotations
 

@@ -1,6 +1,10 @@
 """Jit'd public wrapper for the flash_attention kernel (shape checks +
 interpret switch; interpret=True is the validated CPU path, False targets
-real TPU)."""
+real TPU).
+
+DESIGN.md §1 (kernels layer): public jit wrapper — shape checks + interpret
+switch for the CPU-validated path.
+"""
 from __future__ import annotations
 
 import jax

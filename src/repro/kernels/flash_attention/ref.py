@@ -1,4 +1,8 @@
-"""Pure-jnp oracle for the flash_attention kernel."""
+"""Pure-jnp oracle for the flash_attention kernel.
+
+DESIGN.md §1 (kernels layer): the pure-jnp oracle the kernel is equivalence-
+tested against.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp

@@ -1,4 +1,8 @@
-"""Jit'd wrapper for paged_attention (shape checks + interpret switch)."""
+"""Jit'd wrapper for paged_attention (shape checks + interpret switch).
+
+DESIGN.md §1 (kernels layer): public jit wrapper — shape checks + interpret
+switch.
+"""
 from __future__ import annotations
 
 import jax

@@ -1,4 +1,8 @@
-"""Pure-jnp oracle for paged_attention: densify the pages, then softmax."""
+"""Pure-jnp oracle for paged_attention: densify the pages, then softmax.
+
+DESIGN.md §1 (kernels layer): densify-then-softmax oracle the paged kernel
+is tested against.
+"""
 from __future__ import annotations
 
 import jax

@@ -1,4 +1,8 @@
-"""Jit'd wrapper for wc_combine."""
+"""Jit'd wrapper for wc_combine.
+
+DESIGN.md §2.1 (the combine primitive): public jit wrapper for the
+wc_combine kernel.
+"""
 from __future__ import annotations
 
 import jax

@@ -1,4 +1,8 @@
-"""Pure-jnp oracle for wc_combine (same contract as core.combine)."""
+"""Pure-jnp oracle for wc_combine (same contract as core.combine).
+
+DESIGN.md §2.1 (the combine primitive): pure-jnp oracle sharing
+core/combine's contract.
+"""
 from __future__ import annotations
 
 import jax

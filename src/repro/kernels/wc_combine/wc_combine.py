@@ -8,6 +8,9 @@ is ordered, so block i reads the carry block i-1 wrote.
 
 Used by: the dataplane engine (combine path), the MoE dispatch
 (rank-within-expert), and the embedding-gradient combiner.
+
+DESIGN.md §2.1 (the combine primitive): Pallas twin of
+core/combine.plan_combine — identical contract, fused VMEM pass.
 """
 from __future__ import annotations
 

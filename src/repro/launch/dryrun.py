@@ -1,3 +1,9 @@
+"""Multi-pod dry-run driver: lower every (arch x cell x mesh) and record memory,
+cost and collective analysis without touching real hardware.
+
+DESIGN.md §5 (dry-run shape-cell policy): the grid, the skip rules, and the
+per-cell JSON this module emits.
+"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 

@@ -1,5 +1,8 @@
 """Production mesh builders (kept as FUNCTIONS so importing this module never
-touches jax device state)."""
+touches jax device state).
+
+DESIGN.md §3.1 (mesh axes): the production and local mesh builders.
+"""
 from __future__ import annotations
 
 import jax

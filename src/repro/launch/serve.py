@@ -2,6 +2,9 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
         --requests 16 --max-new 8
+
+DESIGN.md §1 (launch layer): serving driver wiring scheduler + pagetable +
+models on the shared meshes.
 """
 from __future__ import annotations
 

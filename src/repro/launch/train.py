@@ -8,6 +8,9 @@ Features wired in: deterministic resumable data pipeline, sharded AdamW,
 async checkpointing + restore-on-restart, fleet heartbeat monitor
 (straggler/failure detection), optional int8 gradient compression with
 error feedback, optional CIDER-combined sparse embedding gradients.
+
+DESIGN.md §1 (launch layer): training driver wiring data, models, optimizer,
+compression and FT on the shared meshes.
 """
 from __future__ import annotations
 

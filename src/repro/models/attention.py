@@ -11,6 +11,9 @@ The training path is a pure-jnp blockwise-softmax ("flash") implementation —
 O(S) live memory, no S x S score tensor — which doubles as the numerical
 oracle for the Pallas kernel in ``repro.kernels.flash_attention`` (used on
 real TPU; this module is the portable fallback and the dry-run path).
+
+DESIGN.md §1 (models layer): GQA attention — chunked-flash prefill + cached
+decode on the shared meshes.
 """
 from __future__ import annotations
 

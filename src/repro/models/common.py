@@ -4,6 +4,9 @@ sharding axes.
 Every parameter is created through ``Param``/``init_leaf`` which records a
 tuple of *logical axis names* alongside the array; ``repro.dist.sharding``
 maps logical axes -> mesh axes (FSDP/TP/EP) for any mesh shape.
+
+DESIGN.md §3.2 (logical-axis rules): boxed Params + shared building blocks
+carrying logical sharding axes.
 """
 from __future__ import annotations
 

@@ -1,4 +1,8 @@
-"""Model configuration shared by all 10 assigned architectures."""
+"""Model configuration shared by all 10 assigned architectures.
+
+DESIGN.md §1 (models layer): the one ModelConfig dataclass all architecture
+registries instantiate.
+"""
 from __future__ import annotations
 
 import dataclasses

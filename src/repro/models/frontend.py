@@ -7,6 +7,9 @@ backbone-only; ``input_specs()`` provides precomputed frame/patch embeddings).
 * vision (phi-3-vision): a real system would run CLIP ViT-L/14 over image
   crops; here ``input_specs`` supplies (B, n_patches, frontend_dim) patch
   embeddings directly.
+
+DESIGN.md §5 (dry-run policy): modality frontends are stubs by assignment —
+input_specs supplies embeddings.
 """
 from __future__ import annotations
 

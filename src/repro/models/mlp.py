@@ -1,4 +1,7 @@
-"""Gated MLP (SwiGLU) — the dense FFN used by every assigned transformer."""
+"""Gated MLP (SwiGLU) — the dense FFN used by every assigned transformer.
+
+DESIGN.md §1 (models layer): SwiGLU FFN with logical-axis sharding.
+"""
 from __future__ import annotations
 
 import jax

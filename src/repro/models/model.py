@@ -1,5 +1,8 @@
 """The public Model API: init / train_step-ready loss / prefill / decode +
 ShapeDtypeStruct input specs for the multi-pod dry-run.
+
+DESIGN.md §1 (models layer): the public init/loss/prefill/decode API the
+launchers and dry-run drive.
 """
 from __future__ import annotations
 

@@ -6,6 +6,9 @@ a_t = exp(-c * softplus(Lambda) * sigmoid(r_t))          (c = 8)
 Train/prefill uses an associative scan over time (log-depth); decode is the
 O(1) recurrence.  The temporal conv1d (width 4) preceding the gate matches
 the Griffin recurrent block.
+
+DESIGN.md §1 (models layer): RG-LRU recurrent block (scan-over-time, mixed-
+precision-stable).
 """
 from __future__ import annotations
 

@@ -4,6 +4,8 @@ linear-across algorithm (Dao & Gu, arXiv:2405.21060 §6).
 Train/prefill: O(S * L) with chunk length L (default 256); decode: O(1)
 recurrent state (B, H, P, N).  Pure jnp; numerically validated against the
 naive recurrence in tests.
+
+DESIGN.md §1 (models layer): Mamba-2 SSD chunked scan layer.
 """
 from __future__ import annotations
 

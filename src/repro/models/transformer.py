@@ -8,6 +8,9 @@ Families:
   hybrid  — RecurrentGemma: (rec, rec, local-attn) triples + MLP each layer
   encoder — bidirectional dense (hubert backbone)
   vlm     — dense decoder fed by a vision-stub prefix (phi-3-vision backbone)
+
+DESIGN.md §1 (models layer): block assembly + scan-over-layers for every
+assigned family.
 """
 from __future__ import annotations
 

@@ -18,6 +18,9 @@ down-for-k-windows restarts), and ``elastic`` (arbitrary join/leave event
 lists).  Rejoin needs no special handling anywhere downstream: a returning
 CN simply starts issuing ops again (the store and the replicated credit
 table were never CN-local state).
+
+DESIGN.md §8.1 (the liveness plane): (W, n_cns) alive-mask schedules with
+crash/rolling/elastic builders.
 """
 from __future__ import annotations
 

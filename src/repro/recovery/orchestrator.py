@@ -17,6 +17,9 @@ single-device ``run_recovery`` over the same stream — shard death never
 changes the data-plane bill, it only adds the control-plane ``recovery_io``
 (the assertion ``benchmarks/recovery.py`` and ``tests/test_recovery.py``
 make).
+
+DESIGN.md §8.3 (failover ownership rule): splits runs around FailoverEvents
+and asserts the bit-equal recovery bill.
 """
 from __future__ import annotations
 

@@ -16,6 +16,9 @@ PER-CHIP).  Extracts, with while-loop trip-count multiplication — XLA's own
 * HBM traffic estimate: result + operand bytes of instructions in
   *sequencing* computations only (entry + while bodies) — called fusion
   bodies are represented by their call-site line.
+
+DESIGN.md §5 (dry-run policy): extracts per-chip flops/bytes/collective
+terms from partitioned HLO text.
 """
 from __future__ import annotations
 

@@ -1,6 +1,9 @@
 """Aggregate dry-run JSONs into the EXPERIMENTS.md roofline table.
 
     PYTHONPATH=src python -m repro.rooflines.report results/dryrun
+
+DESIGN.md §5 (dry-run policy): folds per-cell dry-run JSONs into the
+roofline summary table.
 """
 from __future__ import annotations
 

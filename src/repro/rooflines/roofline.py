@@ -9,6 +9,9 @@ per-chip program), so:
 
 The dominant term is the bottleneck; roofline fraction of a cell =
 useful_model_flops / (chips * peak * dominant_term).
+
+DESIGN.md §5 (dry-run policy): three-term (compute/HBM/ICI) per-chip step-
+time model for the dry-run grid.
 """
 from __future__ import annotations
 

@@ -4,6 +4,9 @@ Host-side control loop (the device side is ``serve_step``): admits requests
 into free decode slots, allocates KV pages from a free list, consults the
 ``PageTable`` for shared-prefix hits (skipping prefill for cached blocks),
 and recycles pages on completion (DELETE -> eviction when refcount drops).
+
+DESIGN.md §1 (serving layer): host-side continuous-batching loop over the
+CIDER-managed prefix cache (pagetable, §2.1).
 """
 from __future__ import annotations
 

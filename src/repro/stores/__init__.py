@@ -12,6 +12,9 @@ synchronization (the paper's contribution) is delegated to
 ``repro.core.engine`` at the data-pointer level — exactly CIDER's integration
 point ("all memory-disaggregated systems with optimistic out-of-place
 modification", §4.4).
+
+DESIGN.md §1 (stores layer): index structures resolving keys to engine
+slots; only the radix store serves SCAN (§9.1).
 """
 from repro.stores.pointer_array import PointerArray
 from repro.stores.race_hash import RaceHash

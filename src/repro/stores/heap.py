@@ -11,6 +11,9 @@ schemes are IOPS-bound, not bandwidth-bound, which our two-resource NIC model
 ``reclaim`` is provided for long-running loops: compacts live blocks and
 rewrites pointers (host-side, amortized; DM systems do this with epoch-based
 GC off the critical path).
+
+DESIGN.md §2 (engine conventions): out-of-place bump heap + offline reclaim
+preserving the logical store view.
 """
 from __future__ import annotations
 

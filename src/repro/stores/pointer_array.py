@@ -1,9 +1,11 @@
 """The pointer-array micro-benchmark store (§5.2).
 
+Layer: stores (DESIGN.md §1) — contract: key i *is* slot i, one pointer READ
+of index I/O per op; point ops only (SCAN is rejected, DESIGN.md §9).
+
 "A minimalistic object storage ... to quantify the pure performance
-advancement brought about by CIDER": key i *is* slot i; each slot holds a
-data pointer to an out-of-place KV pair in the heap.  Index I/O per op is a
-single pointer READ.
+advancement brought about by CIDER": each slot holds a data pointer to an
+out-of-place KV pair in the heap.
 """
 from __future__ import annotations
 
@@ -11,9 +13,20 @@ import dataclasses
 
 from repro.core import engine, runner
 from repro.core.credits import CreditState, credit_init
-from repro.core.types import EngineConfig, IOMetrics, OpBatch, SyncMode
+from repro.core.types import EngineConfig, IOMetrics, OpBatch, OpKind, SyncMode
 
 __all__ = ["PointerArray"]
+
+
+def _reject_scan(kinds) -> None:
+    """Point-op stores cannot serve range reads — fail loudly, not with a
+    silent 0-row result (DESIGN.md §9)."""
+    if bool((kinds == OpKind.SCAN).any()):
+        raise NotImplementedError(
+            "PointerArray is a point-op object store: it has no key order, "
+            "so SCAN has no contiguous leaf run to traverse.  Range reads "
+            "need the radix index (repro.stores.SmartART), whose leaf "
+            "entries sit in key order (DESIGN.md §9).")
 
 
 @dataclasses.dataclass
@@ -37,6 +50,7 @@ class PointerArray:
         return dataclasses.replace(self, state=state)
 
     def apply(self, batch: OpBatch) -> tuple["PointerArray", engine.Results, IOMetrics]:
+        _reject_scan(batch.kinds)
         state, credits, res, io = engine.apply_batch(
             self.cfg, self.state, self.credits, batch)
         return dataclasses.replace(self, state=state, credits=credits), res, io
@@ -48,6 +62,7 @@ class PointerArray:
         Store/credit buffers are donated to the scan — use the returned
         instance, not ``self``, afterwards.
         """
+        _reject_scan(stream.batch.kinds)
         state, credits, res, io = runner.run_windows(
             self.cfg, self.state, self.credits, stream,
             io_per_window=io_per_window)

@@ -14,6 +14,11 @@ I/O pattern and the slot-level concurrency:
 Resizing (directory doubling) is out of scope: CIDER integrates at the
 pointer-swap level (§4.4) and the paper holds table capacity fixed; inserts
 into a full bucket pair fail with ``overflow``.
+
+SCAN is rejected (DESIGN.md §9): a hash index scatters adjacent keys across
+unrelated buckets, so a key range has no contiguous slot run to traverse —
+the FlexKV/Outback motivation for pairing DM stores with a range-capable
+radix index (``repro.stores.SmartART``) when the workload scans.
 """
 from __future__ import annotations
 
@@ -127,6 +132,12 @@ class RaceHash:
               ) -> tuple["RaceHash", engine.Results, IOMetrics, jax.Array]:
         """Resolve + execute one batch; returns (store', results, io, overflow)."""
         kinds = jnp.asarray(kinds, jnp.int32)
+        if bool((kinds == OpKind.SCAN).any()):
+            raise NotImplementedError(
+                "RaceHash cannot serve SCAN: the hash scatters adjacent keys "
+                "across unrelated buckets, so a key range has no contiguous "
+                "slot run to traverse.  Use the radix index "
+                "(repro.stores.SmartART) for range workloads (DESIGN.md §9).")
         keys = jnp.asarray(keys, jnp.int32)
         values = jnp.asarray(values, jnp.int32)
         b = kinds.shape[0]

@@ -1,13 +1,22 @@
 """SMART-style adaptive radix tree index (Luo et al., OSDI'23), CIDER-integrated.
 
+Layer: stores (DESIGN.md §1, §9) — contract: resolve string keys to engine
+slots, account index-side I/O, and (radix only) resolve key ranges to
+contiguous leaf-slot runs for SCAN.
+
 SMART stores data pointers in radix-tree leaves; clients cache internal
 nodes, so the common-case I/O is a leaf READ + the pointer swap — exactly
 CIDER's integration point.  We model a fixed-span (8-bit), fixed-depth radix
 tree over a ``key_bits``-sized key space:
 
-* the leaf entry address is a *bijective* function of the key (radix path),
-  so the leaf entry IS the engine slot — no reservation protocol is needed
-  (unlike the hash index) and structural node splits never move leaves;
+* the leaf entry address is a *bijective* function of the key (the radix
+  path IS the key), so the leaf entry is the engine slot — no reservation
+  protocol is needed (unlike the hash index) and structural node splits
+  never move leaves;
+* radix paths sort in key order, so leaf entries sit in key order and the
+  key range ``[k, k+c)`` is a *contiguous leaf-slot run* — the range-scan
+  property that separates radix indexes from hash indexes (DESIGN.md §9)
+  and the reason this store alone serves ``OpKind.SCAN``;
 * per-op index I/O: ``path_misses`` uncached internal-node READs (client
   path cache, SMART §3) + the leaf read; defaults model a warm cache.
 
@@ -31,16 +40,13 @@ __all__ = ["SmartART"]
 
 
 def _radix_slot(keys: jax.Array, key_bits: int) -> jax.Array:
-    """Leaf-entry address of a key: the radix path is the key itself (fixed
-    span, fixed depth), i.e. a bit-reversed permutation of the key space so
-    adjacent keys spread across leaf nodes (as ART fanout does)."""
-    k = keys.astype(jnp.uint32)
-    k = ((k & 0x55555555) << 1) | ((k >> 1) & 0x55555555)
-    k = ((k & 0x33333333) << 2) | ((k >> 2) & 0x33333333)
-    k = ((k & 0x0F0F0F0F) << 4) | ((k >> 4) & 0x0F0F0F0F)
-    k = ((k & 0x00FF00FF) << 8) | ((k >> 8) & 0x00FF00FF)
-    k = (k << 16) | (k >> 16)
-    return (k >> (32 - key_bits)).astype(jnp.int32)
+    """Leaf-entry address of a key: the radix path IS the key (fixed span,
+    fixed depth), so leaf entries are laid out in key order and a key range
+    maps to a contiguous slot run — the property SCAN traversal needs.
+    Earlier revisions bit-reversed the path to spread adjacent keys across
+    leaf nodes; that permutation is exactly what makes hash-style layouts
+    range-incapable, and real radix trees do not do it."""
+    return (keys.astype(jnp.int32)) & jnp.int32((1 << key_bits) - 1)
 
 
 @dataclasses.dataclass
@@ -53,11 +59,12 @@ class SmartART:
     @staticmethod
     def create(key_bits: int = 20, mode: SyncMode = SyncMode.CIDER,
                path_misses: int = 0, credit_table: int = 4096,
-               **kw) -> "SmartART":
+               scan_max: int = 16, **kw) -> "SmartART":
         n_slots = 1 << key_bits
         cfg = EngineConfig(n_slots=n_slots, heap_slots=4 * n_slots, mode=mode,
                            index_read_iops=1 + path_misses,
-                           index_read_bytes=8 + 256 * 8 * path_misses, **kw)
+                           index_read_bytes=8 + 256 * 8 * path_misses,
+                           scan_max=scan_max, **kw)
         return SmartART(cfg=cfg, key_bits=key_bits,
                         state=engine.store_init(cfg),
                         credits=credit_init(credit_table))

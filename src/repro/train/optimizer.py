@@ -1,5 +1,9 @@
 """Sharded AdamW (bf16 params, f32 moments) — moments inherit the params'
-logical sharding, so FSDP shards optimizer state for free (ZeRO-style)."""
+logical sharding, so FSDP shards optimizer state for free (ZeRO-style).
+
+DESIGN.md §3.2 (logical-axis rules): AdamW whose moments inherit param
+sharding — FSDP-sharded state for free.
+"""
 from __future__ import annotations
 
 import dataclasses

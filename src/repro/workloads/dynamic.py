@@ -24,6 +24,9 @@ Four scenario families (registry: ``SCENARIOS``):
   populated region (scenarios carry ``populated_frac`` < 1).
 * ``skew_drift`` — Zipf theta interpolates linearly ``theta0 -> theta1``
   across windows (Fig 13's skew sweep as one non-stationary stream).
+
+DESIGN.md §7.1 (scenario generators): time-varying contention streams that
+exercise the AIMD adaptation end to end.
 """
 from __future__ import annotations
 

@@ -20,6 +20,9 @@ over the same windows — modeled on the failure experiments of FUSEE
 Traffic is the same skewed UPDATE/SEARCH mix the dynamic-contention
 scenarios use, with the hot set strided across lanes so hot writers span
 CNs (otherwise baseline local WC absorbs the queue and nothing strands).
+
+DESIGN.md §8.4 (recovery benchmark): op stream + liveness schedule pairs for
+the crash scenarios.
 """
 from __future__ import annotations
 

@@ -14,6 +14,9 @@ Two implementations:
 References: W. Hörmann, G. Derflinger, "Rejection-inversion to generate
 variates from monotone discrete distributions", TOMACS 6(3), 1996; YCSB
 (Cooper et al., SoCC'10).
+
+DESIGN.md §1 (workloads layer): the skewed-key samplers under every YCSB
+generator (§9.4).
 """
 from __future__ import annotations
 

@@ -1,0 +1,129 @@
+"""YCSB A-F composition contracts (DESIGN.md §9, docs/METRICS.md).
+
+The suite generators are the input side of the headline benchmark — if a
+mix drifts, every downstream number silently measures a different workload.
+These tests pin: op-mix fractions per workload, E's scan-length
+distribution, D's latest-key recency, F's read-modify-write pairing, and
+the frontier rule (no point read ever targets a not-yet-inserted key).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.types import OpKind
+from repro.workloads.ycsb import YCSB, YCSBSpec, generate_ycsb_stream
+
+W, B, NK, NC = 8, 2048, 4096, 64
+
+
+def _stream(name, seed=11):
+    return generate_ycsb_stream(YCSB[name], W, B, NK, NC, seed=seed)
+
+
+def _frac(kinds, kind):
+    return float((kinds == kind).mean())
+
+
+# lane-level mixes implied by the request-level YCSB definitions; F's RMW
+# requests occupy two lanes, so its lane mix is 2/3 SEARCH + 1/3 UPDATE
+LANE_MIX = {
+    "A": {OpKind.SEARCH: 0.50, OpKind.UPDATE: 0.50},
+    "B": {OpKind.SEARCH: 0.95, OpKind.UPDATE: 0.05},
+    "C": {OpKind.SEARCH: 1.00},
+    "D": {OpKind.SEARCH: 0.95, OpKind.INSERT: 0.05},
+    "E": {OpKind.SCAN: 0.95, OpKind.INSERT: 0.05},
+    "F": {OpKind.SEARCH: 2 / 3, OpKind.UPDATE: 1 / 3},
+}
+
+
+@pytest.mark.parametrize("name", list(YCSB))
+def test_op_mix_fractions(name):
+    ops = _stream(name)
+    for kind in (OpKind.SEARCH, OpKind.UPDATE, OpKind.INSERT, OpKind.SCAN,
+                 OpKind.DELETE):
+        want = LANE_MIX[name].get(kind, 0.0)
+        assert _frac(ops.kinds, kind) == pytest.approx(want, abs=0.015), \
+            f"{name}: {kind.name} fraction off"
+
+
+def test_e_scan_length_distribution():
+    """E's scan length ~ Uniform[1, scan_max]: full support, flat histogram
+    (chi-square below the 99.9% critical value of chi2(15) ~ 37.7)."""
+    spec = YCSB["E"]
+    ops = _stream("E")
+    lens = ops.values[ops.kinds == OpKind.SCAN]
+    assert lens.min() == 1 and lens.max() == spec.scan_max
+    assert lens.mean() == pytest.approx((1 + spec.scan_max) / 2, rel=0.03)
+    counts = np.bincount(lens.astype(int), minlength=spec.scan_max + 1)[1:]
+    exp = lens.size / spec.scan_max
+    chi2 = float(((counts - exp) ** 2 / exp).sum())
+    assert chi2 < 40, f"chi2={chi2:.1f} for dof={spec.scan_max - 1}"
+
+
+def test_d_latest_key_recency():
+    """D's reads follow the latest distribution: they track the insert
+    frontier upward and concentrate on recently inserted keys."""
+    ops = _stream("D")
+    frontier = NK
+    med = []
+    for w in range(W):
+        rd = ops.kinds[w] == OpKind.SEARCH
+        keys = ops.keys[w][rd]
+        assert keys.max() < frontier, "read of a not-yet-inserted key"
+        assert keys.min() >= 0
+        # >=70% of reads hit the most recent 10% of the current universe
+        recent = float((keys >= frontier * 0.9).mean())
+        assert recent > 0.70, f"window {w}: only {recent:.0%} recent"
+        med.append(float(np.median(keys)))
+        frontier += int((ops.kinds[w] == OpKind.INSERT).sum())
+    assert med[-1] > med[0], "read keys must track the growing frontier"
+
+
+def test_d_and_e_inserts_are_fresh_distinct_keys():
+    for name in ("D", "E"):
+        ops = _stream(name)
+        frontier = NK
+        for w in range(W):
+            ins = ops.kinds[w] == OpKind.INSERT
+            k = ops.keys[w][ins]
+            np.testing.assert_array_equal(
+                np.sort(k), frontier + np.arange(k.size),
+                err_msg=f"{name} window {w}: inserts not fresh-distinct")
+            frontier += k.size
+
+
+def test_f_rmw_pairs_are_adjacent_same_key():
+    ops = _stream("F")
+    for w in range(W):
+        kinds, keys = ops.kinds[w], ops.keys[w]
+        upd = np.flatnonzero(kinds == OpKind.UPDATE)
+        assert upd.size > 0
+        assert (upd > 0).all()
+        assert (kinds[upd - 1] == OpKind.SEARCH).all(), \
+            "every RMW UPDATE must directly follow its read"
+        np.testing.assert_array_equal(keys[upd - 1], keys[upd],
+                                      err_msg="RMW pair must share its key")
+
+
+def test_zipf_skew_of_point_reads():
+    """A/B reads are Zipf-skewed over the populated universe: the hottest
+    key absorbs far more than uniform mass and all keys are in-universe."""
+    ops = _stream("A")
+    rd = ops.keys[ops.kinds == OpKind.SEARCH]
+    assert rd.min() >= 0 and rd.max() < NK
+    top = np.bincount(rd.astype(int)).max() / rd.size
+    assert top > 20 / NK, "no hot key — Zipf draw looks uniform"
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="sum to 1"):
+        YCSBSpec("bad", read=0.5, update=0.4)
+
+
+def test_determinism():
+    a = _stream("E", seed=3)
+    b = _stream("E", seed=3)
+    np.testing.assert_array_equal(a.kinds, b.kinds)
+    np.testing.assert_array_equal(a.keys, b.keys)
+    np.testing.assert_array_equal(a.values, b.values)
