@@ -1,8 +1,9 @@
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test test-fast bench-smoke bench-ycsb-smoke bench-scenarios-smoke \
-    bench-recovery-smoke check-regression lint docs-check
+.PHONY: test test-fast bench-smoke bench-kernels-smoke bench-ycsb-smoke \
+    bench-scenarios-smoke bench-recovery-smoke check-regression lint \
+    docs-check
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -23,6 +24,12 @@ test-fast:
 bench-smoke:
 	python -m benchmarks.run --only engine_json --fast
 
+# kernel-dispatch seam smoke (DESIGN.md §10): the fast engine benchmark on
+# BOTH kernel backends (jnp reference + forced Pallas, interpret off-TPU),
+# asserting the verb bills and Results bit-equal -> BENCH_kernels.fast.json
+bench-kernels-smoke:
+	python -m benchmarks.run --only kernels_json
+
 # YCSB core suite (A-F) x SyncMode x {single, 4-way} -> BENCH_ycsb.fast.json,
 # including the sharded-scan bill-equality assertion (committed full-size
 # baseline: `python -m benchmarks.run --only ycsb_json`, no --fast)
@@ -40,12 +47,14 @@ bench-scenarios-smoke:
 bench-recovery-smoke:
 	python -m benchmarks.recovery --fast
 
-# perf-regression gate over the four fast JSONs (CI fails on >10% CIDER
-# modeled-mops drop, on CIDER losing the paper's mode ordering, or on CIDER
-# losing its recovery-overhead lead); depends on the smoke targets so it
-# never gates against stale JSONs
-check-regression: bench-smoke bench-ycsb-smoke bench-scenarios-smoke \
-    bench-recovery-smoke
+# perf-regression gate over the fast JSONs (CI fails on >10% CIDER
+# modeled-mops drop, on CIDER losing the paper's mode ordering, on CIDER
+# losing its recovery-overhead lead, or on a same-backend wall-clock
+# collapse past the _wall_engine floors); depends on the smoke targets —
+# including the kernel bit-identity smoke — so it never gates against
+# stale JSONs
+check-regression: bench-smoke bench-kernels-smoke bench-ycsb-smoke \
+    bench-scenarios-smoke bench-recovery-smoke
 	python -m benchmarks.check_regression
 
 # docs gate: markdown link check over README/DESIGN/docs/ + every

@@ -15,11 +15,19 @@ fixed) would merge green.  Now CI fails when either
 * CIDER loses a *recovery* lead: its orphan-repair verb bill
   (``repair_cas``) or post-crash modeled p99 exceeds MCS's or SPIN's in
   any recovery scenario (OSYNC is lock-free and strands nothing — it is
-  not a recovery rival, it pays on every non-crash window instead).
+  not a recovery rival, it pays on every non-crash window instead), or
+* device wall-clock collapses: any mode's ``throughput_mops`` in the fast
+  engine benchmark falls more than ``--wall-tolerance`` (default 50%)
+  below the committed ``_wall_engine`` floor.  Wall-clock is only
+  comparable on the platform that produced the floor, so this check is
+  SKIPPED (loudly) when the run's backend provenance — JAX backend,
+  resolved kernel implementation, interpret mode — differs from the
+  baseline's (docs/METRICS.md).
 
 ``modeled_mops`` is derived from the exact metered verb bill of seeded
-streams, so it is bit-deterministic across machines — the baselines are
-exact values with a tolerance band, not flaky wall-clock numbers.
+streams, so it is bit-deterministic across machines — those baselines are
+exact values with a tight tolerance band; the wall floors are the one
+platform-gated exception, with a correspondingly loose band.
 
     PYTHONPATH=src python -m benchmarks.check_regression
     PYTHONPATH=src python -m benchmarks.check_regression --update-baseline
@@ -68,6 +76,40 @@ def _collect(engine: dict, scenarios: dict, recovery: dict,
         out[f"recovery/{name}"] = {
             m: sc["modes"][m]["modeled_mops"] for m in MODES}
     return out
+
+
+WALL_PROV_KEYS = ("jax_backend", "kernel_impl", "kernel_interpret")
+
+
+def check_wall(engine: dict, baseline: dict, tolerance: float) -> list[str]:
+    """Wall-clock floors on the fast engine benchmark (DESIGN.md §10.2).
+
+    Gates every mode's ``throughput_mops`` against the committed
+    ``_wall_engine`` floor — but only when the run's backend provenance
+    matches the floor's: a floor recorded on one platform says nothing
+    about another, so a mismatch skips the check (loudly) instead of
+    failing or silently passing."""
+    want = baseline.get("_wall_engine")
+    if want is None:
+        return ["_wall_engine: no committed wall-clock floor — run "
+                "--update-baseline"]
+    prov = engine.get("config", {}).get("provenance", {})
+    base_prov = want.get("provenance", {})
+    if any(prov.get(k) != base_prov.get(k) for k in WALL_PROV_KEYS):
+        print("wall floors SKIPPED: backend provenance "
+              + str({k: prov.get(k) for k in WALL_PROV_KEYS})
+              + " != baseline "
+              + str({k: base_prov.get(k) for k in WALL_PROV_KEYS}))
+        return []
+    failures = []
+    for mode, floor in want["throughput_mops"].items():
+        got = engine[mode]["throughput_mops"]
+        if got < floor * (1.0 - tolerance):
+            failures.append(
+                f"wall/engine/{mode}: throughput_mops {got:.4f} fell "
+                f"{(1 - got / floor) * 100:.0f}% below the committed floor "
+                f"{floor:.4f} (wall tolerance {tolerance:.0%})")
+    return failures
 
 
 def check_recovery(recovery: dict) -> list[str]:
@@ -123,6 +165,10 @@ def main():
     ap.add_argument("--baseline", default=DEFAULT_BASELINE)
     ap.add_argument("--tolerance", type=float, default=0.10,
                     help="allowed fractional drop of CIDER modeled_mops")
+    ap.add_argument("--wall-tolerance", type=float, default=0.50,
+                    help="allowed fractional drop of engine throughput_mops "
+                         "below the committed wall floor (same-backend runs "
+                         "only; wall-clock is noisy, so the band is loose)")
     ap.add_argument("--update-baseline", action="store_true",
                     help="rewrite the baseline file from the current JSONs")
     args = ap.parse_args()
@@ -139,7 +185,15 @@ def main():
                         "configs; exact-verb-bill metrics, deterministic "
                         "given the generator seeds.  Regenerate with "
                         "`python -m benchmarks.check_regression "
-                        "--update-baseline` after an intentional change.",
+                        "--update-baseline` after an intentional change.  "
+                        "_wall_engine holds the device wall-clock floors, "
+                        "gated only on runs whose backend provenance "
+                        "matches (docs/METRICS.md).",
+            "_wall_engine": {
+                "provenance": engine.get("config", {}).get("provenance", {}),
+                "throughput_mops": {
+                    m: engine[m]["throughput_mops"] for m in MODES},
+            },
             **{name: {"CIDER": modes["CIDER"]}
                for name, modes in actual.items()},
         }
@@ -152,6 +206,7 @@ def main():
     baseline = _load(args.baseline, "committed baseline")
     failures = check(actual, baseline, args.tolerance)
     failures += check_recovery(recovery)
+    failures += check_wall(engine, baseline, args.wall_tolerance)
     if failures:
         print(f"PERF REGRESSION GATE: {len(failures)} failure(s)")
         for msg in failures:

@@ -1,0 +1,27 @@
+"""Machine provenance for the committed BENCH_*.json config blocks.
+
+Wall-clock numbers (``wall_s`` / ``throughput_mops``) are only comparable
+between runs on the same platform and kernel path, so every benchmark JSON
+records where it was generated: the JAX backend, device count, and how the
+engine's kernel-dispatch seam (``EngineConfig.kernel_backend``, DESIGN.md
+§10) resolved — which implementation ran and whether the Pallas kernels ran
+interpreted.  ``check_regression.py`` gates wall-clock floors only when the
+current backend matches the committed baseline's; the modeled (verb-bill)
+metrics are bit-deterministic and need no such guard.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.combine import resolve_backend
+
+
+def provenance(kernel_backend: str = "auto") -> dict:
+    impl, interpret = resolve_backend(kernel_backend)
+    return {
+        "jax_backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "kernel_backend": kernel_backend,
+        "kernel_impl": impl,
+        "kernel_interpret": interpret,
+    }

@@ -60,6 +60,8 @@ from repro.recovery import (FailoverEvent, run_recovery, run_recovery_sharded,
                             time_to_repair)
 from repro.workloads.recovery import RECOVERY_SCENARIOS
 
+from benchmarks.provenance import provenance
+
 MODES = [SyncMode.OSYNC, SyncMode.SPIN, SyncMode.MCS, SyncMode.CIDER]
 N_SHARDS = 4
 SURVIVORS = (0, 2)       # shards 1 and 3 die with the CN storm
@@ -173,6 +175,7 @@ def main():
     out = {
         "config": {**c, "n_shards": N_SHARDS, "survivors": list(SURVIVORS),
                    "fast": args.fast, "lease_us": p.lease_us,
+                   "provenance": provenance("auto"),
                    "runner": "repro.recovery.run_recovery / "
                              "run_recovery_sharded",
                    "generated_by": "python -m benchmarks.recovery"

@@ -39,6 +39,8 @@ from repro.stores import PointerArray, RaceHash, SmartART
 from repro.workloads.ycsb import (WORKLOADS, YCSB, generate_window_stream,
                                   generate_ycsb_stream)
 
+from benchmarks.provenance import provenance
+
 OUT = "results/benchmarks"
 MODES = [SyncMode.OSYNC, SyncMode.SPIN, SyncMode.MCS, SyncMode.CIDER]
 N_KEYS = 1_000_000
@@ -257,14 +259,18 @@ def bench_engine_json(fast=False, path=None):
         "config": {"n_slots": n_slots, "batch": b, "windows": windows,
                    "workload": spec.name, "theta": spec.theta, "n_cns": 16,
                    "fast": fast, "runner": "repro.core.runner.run_windows",
+                   "provenance": provenance("auto"),
                    "generated_by": "python -m benchmarks.run --only engine_json"
                                    + (" --fast" if fast else "")},
         "metrics": {
             "io_counters": "exact RDMA-verb bill SUMMED over all windows",
             "wall_s": "host-timed device wall-clock of one fused "
                       "run_windows scan executing every window",
-            "throughput_mops": "windows*batch / wall_s / 1e6 — device-speed "
-                               "regression signal only, NOT the paper metric",
+            "throughput_mops": "windows*batch / wall_s / 1e6 — device "
+                               "wall-clock throughput, gated by "
+                               "check_regression.py wall floors whenever "
+                               "the run's backend provenance matches the "
+                               "committed baseline's (docs/METRICS.md)",
             "modeled_mops": "ops / max(mn_iops/mn_cap, mn_bytes/mn_bw) us — "
                             "MN-NIC-bound throughput, the paper's metric "
                             "(PAPER.md §2.3, §5)",
@@ -306,6 +312,77 @@ def bench_engine_json(fast=False, path=None):
               f"p99={d['modeled_p99_us']:8.1f}us "
               f"wall={d['throughput_mops']:8.3f} Mops/s "
               f"mn_iops={d['mn_iops']:8d} combined={d['combined']:6d}")
+    return out
+
+
+KERNELS_PATH = "BENCH_kernels.fast.json"
+
+
+def bench_kernels_json(fast=True, path=None):
+    """Kernel-dispatch seam smoke (DESIGN.md §10) -> ``BENCH_kernels.fast.json``.
+
+    Runs the fast-size engine benchmark once per kernel backend — the jnp
+    reference and the forced Pallas kernels (interpret mode off-TPU, the
+    compiled kernels on TPU) — and **asserts** the two verb bills and the
+    full per-window Results are bit-equal per SyncMode before writing both
+    wall-clocks + provenance.  Always fast-sized regardless of ``--fast``:
+    this is CI's bit-identity gate on the dispatch seam, not a perf
+    trajectory (that is ``BENCH_engine*.json``); the artifact is uploaded so
+    a failing run shows *which* counter diverged.
+    """
+    path = path or KERNELS_PATH
+    n_slots, b, windows = 4096, 1024, 4
+    spec = WORKLOADS["write-intensive"]
+    ops = generate_window_stream(spec, windows, b, n_slots, b)
+    stream = runner.make_stream(ops.kinds, ops.keys % n_slots, ops.values,
+                                n_cns=16)
+    backends = ("jnp", "pallas")
+    out = {
+        "config": {"n_slots": n_slots, "batch": b, "windows": windows,
+                   "workload": spec.name, "n_cns": 16,
+                   "backends": {be: provenance(be) for be in backends},
+                   "generated_by":
+                       "python -m benchmarks.run --only kernels_json"},
+        "metrics": {
+            "equality": "per SyncMode, the full verb bill AND every "
+                        "per-window Results leaf are asserted bit-equal "
+                        "between the jnp reference and the Pallas kernel "
+                        "path (DESIGN.md §10)",
+            "wall_s": "host-timed fused run_windows scan per backend "
+                      "(interpreted Pallas is expected to be slow on CPU "
+                      "— equality is the gate here, not speed)",
+        },
+    }
+    for mode in MODES:
+        rec, trees = {}, {}
+        for be in backends:
+            def _mk():
+                return PointerArray.create(n_slots, mode=mode,
+                                           kernel_backend=be).populate(
+                    np.arange(n_slots), np.arange(n_slots))
+            _, wres, _ = _mk().apply_stream(stream)      # warm the jit cache
+            jax.block_until_ready(wres.ok)
+            pa = _mk()
+            t0 = time.perf_counter()
+            pa, res, io = pa.apply_stream(stream)
+            jax.block_until_ready((res.ok, io.reads))
+            dt = time.perf_counter() - t0
+            trees[be] = (res, io)
+            d = io.as_dict()
+            d["wall_s"] = round(dt, 4)
+            rec[be] = d
+        ref_leaves = jax.tree.leaves(trees["jnp"])
+        for be in backends[1:]:
+            for lx, ly in zip(ref_leaves, jax.tree.leaves(trees[be])):
+                assert np.array_equal(np.asarray(lx), np.asarray(ly)), \
+                    f"kernels_json/{mode.name}: {be} diverged from jnp"
+        out[mode.name] = rec
+        print(f"{mode.name:6s} bit-equal across {backends}; wall "
+              + "  ".join(f"{be}={rec[be]['wall_s']:.3f}s"
+                          for be in backends), flush=True)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"== kernels_json -> {path} ==")
     return out
 
 
@@ -357,7 +434,7 @@ def bench_ycsb_json(fast=False, path=None):
     heap += -heap % YCSB_N_SHARDS
     out = {
         "config": {**c, "heap_slots": heap, "n_shards": YCSB_N_SHARDS,
-                   "fast": fast,
+                   "fast": fast, "provenance": provenance("auto"),
                    "runner": "repro.core.runner.run_windows / "
                              "repro.dist.store.run_windows_sharded",
                    "generated_by": "python -m benchmarks.run --only ycsb_json"
@@ -442,6 +519,7 @@ def bench_ycsb_json(fast=False, path=None):
 FIGS = {
     "fig11": fig11_12_throughput_latency,
     "engine_json": bench_engine_json,
+    "kernels_json": bench_kernels_json,
     "ycsb_json": bench_ycsb_json,
     "fig13": fig13_skew,
     "fig14": fig14_accuracy,

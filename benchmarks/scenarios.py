@@ -47,6 +47,8 @@ from repro.dist import store as dstore
 from repro.launch.mesh import make_local_mesh
 from repro.workloads.dynamic import SCENARIOS
 
+from benchmarks.provenance import provenance
+
 MODES = [SyncMode.OSYNC, SyncMode.SPIN, SyncMode.MCS, SyncMode.CIDER]
 N_SHARDS = 4
 FULL_BASELINE = "BENCH_scenarios.json"
@@ -144,6 +146,7 @@ def main():
     p = SimParams()
     out = {
         "config": {**c, "n_shards": N_SHARDS, "fast": args.fast,
+                   "provenance": provenance("auto"),
                    "runner": "repro.core.runner.run_windows_traced / "
                              "repro.dist.store.run_windows_sharded_traced",
                    "generated_by": "python -m benchmarks.scenarios"

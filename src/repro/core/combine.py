@@ -9,11 +9,15 @@ wait queue are exactly the ops in the current batch that share a key.  A
 stable sort by (key, queue-position) materializes every wait queue at once;
 the *last* element of each run is the executor; everyone else is combined.
 
-This module is the pure-jnp reference implementation; ``repro.kernels.
-wc_combine`` provides the fused Pallas TPU kernel with an identical contract.
+This module is the kernel-dispatch seam (DESIGN.md §10): ``plan_combine``
+and ``per_key_stats`` accept ``backend`` ∈ {"auto", "pallas", "jnp"} and
+route the sorted-run sweep through either the fused Pallas kernel
+(``repro.kernels.wc_combine``, interpret mode off-TPU) or the pure-jnp
+path below — bit-identical by contract and by test.
 
 DESIGN.md §2.1 (the combine primitive): one lexsort materializes every wait
-queue; reader ranks extend it to SCAN (§9.2).
+queue; reader ranks extend it to SCAN (§9.2); §10 covers backend dispatch
+and the shared-sort derived plans (``stats_from_plan``, ``plan_groups``).
 """
 from __future__ import annotations
 
@@ -23,7 +27,48 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["CombinePlan", "plan_combine", "segment_last", "segment_counts",
-           "OpStats", "per_key_stats", "local_executors", "reader_waits"]
+           "OpStats", "per_key_stats", "stats_from_plan", "GroupPlan",
+           "plan_groups", "group_last", "local_executors", "reader_waits",
+           "resolve_backend"]
+
+_BIG = 2**31 - 1   # python int, weak-typed to int32 at use sites
+
+
+def resolve_backend(backend: str) -> tuple[str, bool]:
+    """Resolve a ``kernel_backend`` config value to ``(impl, interpret)``.
+
+    ``auto`` picks the Pallas kernel only where it is compiled (TPU) and the
+    jnp reference elsewhere — on CPU the interpreted kernel is strictly
+    slower, so "auto" never selects it.  ``pallas`` forces the kernel
+    (interpret mode off-TPU: CI exercises the exact kernel dataflow).
+    ``jnp`` forces the reference.  DESIGN.md §10.
+    """
+    if backend == "auto":
+        if jax.default_backend() == "tpu":
+            return "pallas", False
+        return "jnp", False
+    if backend == "pallas":
+        return "pallas", jax.default_backend() != "tpu"
+    if backend == "jnp":
+        return "jnp", False
+    raise ValueError(f"unknown kernel backend {backend!r} "
+                     "(expected 'auto', 'pallas' or 'jnp')")
+
+
+def _first_last_rank(ks: jax.Array, backend: str
+                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Run boundaries + in-run rank of a *sorted* key array, via the
+    dispatch seam: the Pallas ``wc_combine`` kernel or the jnp sweep."""
+    impl, interpret = resolve_backend(backend)
+    if impl == "pallas":
+        from repro.kernels.wc_combine.ops import wc_combine_op
+        return wc_combine_op(ks, interpret=interpret)
+    idx = jnp.arange(ks.shape[0], dtype=jnp.int32)
+    neq = ks[1:] != ks[:-1]
+    is_first = jnp.concatenate([jnp.ones((1,), bool), neq])
+    is_last = jnp.concatenate([neq, jnp.ones((1,), bool)])
+    rank = idx - jax.lax.cummax(jnp.where(is_first, idx, 0))
+    return is_first, is_last, rank
 
 
 @jax.tree_util.register_dataclass
@@ -43,29 +88,27 @@ class CombinePlan:
     n_unique: jax.Array      # () int32: number of distinct keys (executed writes)
 
 
-def plan_combine(keys: jax.Array, pos: jax.Array, valid: jax.Array) -> CombinePlan:
+def plan_combine(keys: jax.Array, pos: jax.Array, valid: jax.Array,
+                 *, backend: str = "jnp") -> CombinePlan:
     """Build wait queues for a batch of write ops.
 
     ``keys``: (B,) slot ids; ``pos``: (B,) serialization priority (queue
     order); ``valid``: (B,) bool — invalid ops sort to the back and form a
     dedicated run that callers must mask out (they are never executors of a
-    real key because the sort key is +inf for them).
+    real key because the sort key is +inf for them).  ``backend`` selects
+    the run-sweep implementation (DESIGN.md §10); the sort itself is XLA
+    either way and the outputs are bit-identical.
     """
     b = keys.shape[0]
-    big = jnp.int32(2**31 - 1)
-    k = jnp.where(valid, keys, big)
+    k = jnp.where(valid, keys, _BIG)
     # Stable composite sort: primary key, secondary queue position.
     order = jnp.lexsort((pos, k))
     ks = k[order]
-    is_first = jnp.concatenate([jnp.ones((1,), bool), ks[1:] != ks[:-1]])
-    is_last = jnp.concatenate([ks[1:] != ks[:-1], jnp.ones((1,), bool)])
-    seg = jnp.cumsum(is_first.astype(jnp.int32)) - 1          # segment id per element
-    ones = jnp.ones((b,), jnp.int32)
-    counts = jax.ops.segment_sum(ones, seg, num_segments=b)   # per-segment length
-    run_length = counts[seg]
-    # rank within run = position - start of my segment
-    seg_start = jax.ops.segment_min(jnp.arange(b, dtype=jnp.int32), seg, num_segments=b)
-    rank = jnp.arange(b, dtype=jnp.int32) - seg_start[seg]
+    is_first, is_last, rank = _first_last_rank(ks, backend)
+    idx = jnp.arange(b, dtype=jnp.int32)
+    seg_start = idx - rank
+    seg_end = jax.lax.cummin(jnp.where(is_last, idx, _BIG), reverse=True)
+    run_length = seg_end - seg_start + 1
     valid_sorted = valid[order]
     n_unique = jnp.sum(is_first & valid_sorted).astype(jnp.int32)
     return CombinePlan(
@@ -103,19 +146,109 @@ class OpStats:
     retry_sum: jax.Array  # () int32 — sum of ranks = Σ_k m_k(m_k-1)/2
 
 
-def per_key_stats(keys: jax.Array, pos: jax.Array, mask: jax.Array) -> OpStats:
-    """Queue statistics per masked op, grouped by key, ordered by ``pos``."""
-    plan = plan_combine(keys, pos, mask)
-    b = keys.shape[0]
+def stats_from_plan(plan: CombinePlan, mask: jax.Array) -> OpStats:
+    """Queue statistics for a *subset* of an existing plan's valid ops.
+
+    Precondition: ``mask ⊆`` the validity the plan was built with, so every
+    masked lane sits inside its true key run.  Because the lexsort is stable
+    and masked lanes keep their relative ``pos`` order, counting masked
+    lanes inside each run reproduces ``per_key_stats(keys, pos, mask)``
+    bit-for-bit — without paying a second sort (DESIGN.md §10.2).
+    """
+    b = plan.perm.shape[0]
+    idx = jnp.arange(b, dtype=jnp.int32)
     mask_s = mask[plan.perm]
-    is_tail_s = plan.is_last & mask_s
+    m_i = mask_s.astype(jnp.int32)
+    c = jnp.cumsum(m_i)               # masked lanes through me, inclusive
+    cex = c - m_i                     # masked lanes strictly before me
+    seg_start = idx - plan.rank
+    seg_end = seg_start + plan.run_length - 1
+    rank_s = cex - cex[seg_start]     # masked lanes before me, in-run
+    mult_s = c[seg_end] - cex[seg_start]
+    is_tail_s = mask_s & (c == c[seg_end])
     zeros_i = jnp.zeros((b,), jnp.int32)
     is_tail = jnp.zeros((b,), bool).at[plan.perm].set(is_tail_s)
-    mult_of = zeros_i.at[plan.perm].set(jnp.where(mask_s, plan.run_length, 0))
-    rank_of = zeros_i.at[plan.perm].set(jnp.where(mask_s, plan.rank, 0))
-    retry_sum = jnp.sum(jnp.where(mask_s, plan.rank, 0))
+    mult_of = zeros_i.at[plan.perm].set(jnp.where(mask_s, mult_s, 0))
+    rank_of = zeros_i.at[plan.perm].set(jnp.where(mask_s, rank_s, 0))
+    retry_sum = jnp.sum(jnp.where(mask_s, rank_s, 0))
     return OpStats(is_tail=is_tail, mult_of=mult_of, rank_of=rank_of,
                    retry_sum=retry_sum)
+
+
+def per_key_stats(keys: jax.Array, pos: jax.Array, mask: jax.Array,
+                  *, backend: str = "jnp") -> OpStats:
+    """Queue statistics per masked op, grouped by key, ordered by ``pos``."""
+    return stats_from_plan(plan_combine(keys, pos, mask, backend=backend),
+                           mask)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class GroupPlan:
+    """(key, compute-node) group structure of one window, in sorted order.
+
+    ``perm`` sorts by (key, cn, pos); ``g_end`` is the sorted index of my
+    group's last element.  One such sort serves every masked subset via
+    ``group_last`` (DESIGN.md §10.2).
+    """
+    perm: jax.Array    # (B,) int32
+    g_end: jax.Array   # (B,) int32
+
+
+def plan_groups(keys: jax.Array, cn: jax.Array, pos: jax.Array,
+                valid: jax.Array) -> GroupPlan:
+    """Sort once by (key, cn, pos); invalid lanes form a +inf tail run."""
+    k = jnp.where(valid, keys, _BIG)
+    order = jnp.lexsort((pos, cn, k))
+    ks, cs = k[order], cn[order]
+    glast = jnp.concatenate([(ks[1:] != ks[:-1]) | (cs[1:] != cs[:-1]),
+                             jnp.ones((1,), bool)])
+    idx = jnp.arange(k.shape[0], dtype=jnp.int32)
+    g_end = jax.lax.cummin(jnp.where(glast, idx, _BIG), reverse=True)
+    return GroupPlan(perm=order.astype(jnp.int32), g_end=g_end)
+
+
+def group_last(gplan: GroupPlan, mask: jax.Array) -> jax.Array:
+    """Last masked lane of each (key, cn) group, unsorted order.
+
+    Precondition: ``mask ⊆`` the validity ``plan_groups`` was built with.
+    Equals ``local_executors(keys, cn, pos, mask)`` bit-for-bit (stable
+    sort: masked lanes keep their relative order inside each group).
+    """
+    mask_s = mask[gplan.perm]
+    c = jnp.cumsum(mask_s.astype(jnp.int32))
+    is_lastm_s = mask_s & (c == c[gplan.g_end])
+    return jnp.zeros(mask.shape, bool).at[gplan.perm].set(is_lastm_s)
+
+
+def local_executors(keys: jax.Array, cn: jax.Array, pos: jax.Array,
+                    mask: jax.Array) -> jax.Array:
+    """Local write combining (§3.1): the last (by ``pos``) masked op of each
+    (key, compute-node) group — the only one that leaves the CN."""
+    return group_last(plan_groups(keys, cn, pos, mask), mask)
+
+
+def local_executors_scatter(keys: jax.Array, cn: jax.Array, pos: jax.Array,
+                            mask: jax.Array, n_slots: int, n_cns: int,
+                            base=0) -> jax.Array:
+    """Sort-free ``local_executors``: one O(B) scatter-max over a static
+    ``(n_slots * n_cns,)`` cell table instead of a (key, cn, pos) lexsort.
+
+    Bit-identical to ``local_executors`` under the ``OpBatch`` contract the
+    engine already relies on — ``pos`` unique per batch (serialization
+    priorities 0..B-1) and ``cn ∈ [0, n_cns)`` (``OpBatch.make`` takes cn
+    mod n_cns; the liveness plane clips the same way): the unique max-pos
+    masked lane of each (key, cn) cell IS the stable sort's group tail.
+    The engine picks this form whenever a static CN count is in scope
+    (``alive``/``died`` carry it as their shape) — DESIGN.md §10.2.
+    ``base`` rebases global keys to shard-local cells under sharding; lanes
+    outside ``mask`` never touch the table, so out-of-shard keys are inert.
+    """
+    slot = jnp.clip(keys - base, 0, n_slots - 1)
+    gi = slot * n_cns + jnp.clip(cn, 0, n_cns - 1)
+    buf = jnp.full((n_slots * n_cns,), -1, jnp.int32)
+    buf = buf.at[gi].max(jnp.where(mask, pos, -1), mode="drop")
+    return mask & (buf[gi] == pos)
 
 
 def reader_waits(keys: jax.Array, pos: jax.Array, readers: jax.Array,
@@ -129,34 +262,21 @@ def reader_waits(keys: jax.Array, pos: jax.Array, readers: jax.Array,
     with a writer (readers inherit their parent op's position; a lane is
     either a reader probe or a writer, never both on one slot).
 
+    This standalone form pays its own lexsort; the engine's SCAN path fuses
+    the same computation into the ``scan_probe`` kernel pass over the
+    already-sorted probe lanes (DESIGN.md §10.3).
+
     Returns (N,) int32 — the wait rank for reader lanes, 0 elsewhere.
     """
     n = keys.shape[0]
     mask = readers | writers
-    big = jnp.int32(2**31 - 1)
-    k = jnp.where(mask, keys, big)
+    k = jnp.where(mask, keys, _BIG)
     order = jnp.lexsort((pos, k))
     ks = k[order]
     w_s = (writers & mask)[order].astype(jnp.int32)
     is_first = jnp.concatenate([jnp.ones((1,), bool), ks[1:] != ks[:-1]])
-    seg = jnp.cumsum(is_first.astype(jnp.int32)) - 1
     excl = jnp.cumsum(w_s) - w_s                   # writers before me, globally
-    seg_start = jax.ops.segment_min(jnp.arange(n, dtype=jnp.int32), seg,
-                                    num_segments=n)
-    waits_s = excl - excl[seg_start[seg]]          # writers before me, in-queue
+    base = jax.lax.cummax(jnp.where(is_first, excl, 0))
+    waits_s = excl - base                          # writers before me, in-queue
     out = jnp.zeros((n,), jnp.int32)
     return out.at[order].set(jnp.where(readers[order], waits_s, 0))
-
-
-def local_executors(keys: jax.Array, cn: jax.Array, pos: jax.Array,
-                    mask: jax.Array) -> jax.Array:
-    """Local write combining (§3.1): the last (by ``pos``) masked op of each
-    (key, compute-node) group — the only one that leaves the CN."""
-    big = jnp.int32(2**31 - 1)
-    k = jnp.where(mask, keys, big)
-    order = jnp.lexsort((pos, cn, k))
-    ks, cs = k[order], cn[order]
-    last = jnp.concatenate([(ks[1:] != ks[:-1]) | (cs[1:] != cs[:-1]),
-                            jnp.ones((1,), bool)])
-    out = jnp.zeros(keys.shape, bool).at[order].set(last)
-    return out & mask

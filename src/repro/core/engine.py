@@ -73,7 +73,6 @@ from repro.core.types import (NULL_PTR, EngineConfig, IOMetrics, OpBatch,
 __all__ = ["StoreState", "Results", "store_init", "store_view", "apply_batch",
            "populate"]
 
-_KEEP = jnp.int32(-2)
 _NONE = jnp.int32(-1)
 
 
@@ -144,54 +143,37 @@ def store_view(state: StoreState) -> tuple[jax.Array, jax.Array]:
 
 # ---------------------------------------------------------------------------
 # Segmented linearization: per-slot sequential semantics, fully vectorized.
-# Each op is a transfer function on (exists, value); functions on a 2-point
-# domain compose associatively, so one segmented associative_scan linearizes
-# every wait queue in the batch at once.
+# Each op is a transfer function on (exists, value).  On a 2-point domain a
+# composition chain collapses to "the last op that *set* the component": the
+# last INSERT/DELETE before me decides existence, and from that the
+# value-writing events (INSERT into empty, UPDATE/DELETE of occupied) are
+# known lane-locally, so the last such event before me decides the value.
+# Two prefix cummax sweeps + gathers replace the associative_scan of packed
+# transfer matrices the engine used to run (~14x cheaper; DESIGN.md §10.2),
+# bit-identically — every quantity is an exact int op.
 # ---------------------------------------------------------------------------
 
-def _op_transfer(kinds, values):
-    """Per-op transfer function: for e_in in {0,1} -> (e_out, c_out).
-    c_out == _KEEP means "pass the incoming value through"."""
-    k = kinds
-    ins, upd, dele = (k == OpKind.INSERT), (k == OpKind.UPDATE), (k == OpKind.DELETE)
-    e0 = jnp.where(ins, 1, 0).astype(jnp.int32)            # from empty
-    e1 = jnp.where(dele, 0, 1).astype(jnp.int32)           # from occupied
-    c0 = jnp.where(ins, values, _KEEP)
-    c1 = jnp.where(upd, values, _KEEP)
-    c1 = jnp.where(dele, _NONE, c1)
-    return jnp.stack([e0, e1], -1), jnp.stack([c0, c1], -1)
+def _last_before(marker, code):
+    """Per lane: the ``code`` of the last marked lane STRICTLY before it
+    (globally), or -1.  ``code`` must be monotone in lane index so a running
+    max finds the latest marked lane; callers then check the decoded index
+    against their run start to scope the result to the lane's own run."""
+    enc = jnp.where(marker, code, -1)
+    g = jax.lax.cummax(enc)
+    return jnp.concatenate([jnp.full((1,), -1, jnp.int32), g[:-1]])
 
 
-def _compose(f, g):
-    """(f then g) on the 2-point domain; both are (e[B,2], c[B,2])."""
-    fe, fc = f
-    ge, gc = g
-    mid = fe                                   # (B,2) in {0,1}
-    out_e = jnp.take_along_axis(ge, mid, axis=-1)
-    g_at = jnp.take_along_axis(gc, mid, axis=-1)
-    out_c = jnp.where(g_at == _KEEP, fc, g_at)
-    return out_e, out_c
-
-
-def _segmented_scan(e, c, first):
-    """Inclusive segmented scan of transfer functions along axis 0."""
-    def comb(a, b):
-        ae, ac, af = a
-        be, bc, bf = b
-        ce, cc = _compose((ae, ac), (be, bc))
-        e_out = jnp.where(bf[:, None], be, ce)
-        c_out = jnp.where(bf[:, None], bc, cc)
-        return e_out, c_out, af | bf
-    return jax.lax.associative_scan(comb, (e, c, first), axis=0)
-
-
-def _apply(e, c, e_in, v_in):
-    """Apply transfer (e[B,2], c[B,2]) to incoming scalar state (e_in, v_in)."""
-    idx = e_in.astype(jnp.int32)[:, None]
-    e_out = jnp.take_along_axis(e, idx, axis=-1)[:, 0]
-    c_out = jnp.take_along_axis(c, idx, axis=-1)[:, 0]
-    v_out = jnp.where(c_out == _KEEP, v_in, c_out)
-    return e_out.astype(bool), v_out
+def _probe_sweep(keys_sorted, setcode, writer, e_init, backend):
+    """Dispatch the fused probe pass (existence-before + reader waits over
+    sorted lanes) to the Pallas ``scan_probe`` kernel or its jnp oracle
+    (DESIGN.md §10.3)."""
+    impl, interpret = wc.resolve_backend(backend)
+    if impl == "pallas":
+        from repro.kernels.scan_probe.ops import scan_probe_op
+        return scan_probe_op(keys_sorted, setcode, writer, e_init,
+                             interpret=interpret)
+    from repro.kernels.scan_probe.ref import scan_probe_ref
+    return scan_probe_ref(keys_sorted, setcode, writer, e_init)
 
 
 # ---------------------------------------------------------------------------
@@ -270,46 +252,58 @@ def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
     is_delete = (kinds == OpKind.DELETE) & valid_o
     upd_full = (kinds == OpKind.UPDATE) & valid
 
-    # ---- 1. linearize: one segmented scan serializes every slot's queue ----
-    plan_all = wc.plan_combine(keys, pos, valid_o)
+    # ---- 1. linearize: one sorted last-setter sweep serializes every
+    # slot's queue (DESIGN.md §10.2) ----
+    plan_all = wc.plan_combine(keys, pos, valid_o, backend=cfg.kernel_backend)
     perm = plan_all.perm
-    e_t, c_t = _op_transfer(kinds[perm], values[perm])
-    # invalid ops are identity transforms
+    idx = jnp.arange(b, dtype=jnp.int32)
+    seg_start = idx - plan_all.rank
+    seg_end = seg_start + plan_all.run_length - 1
+    ks = kinds[perm]
+    vals = values[perm]
     v_sorted = valid_o[perm]
-    ident_e = jnp.broadcast_to(jnp.array([0, 1], jnp.int32), (b, 2))
-    ident_c = jnp.full((b, 2), _KEEP, jnp.int32)
-    e_t = jnp.where(v_sorted[:, None], e_t, ident_e)
-    c_t = jnp.where(v_sorted[:, None], c_t, ident_c)
-    incl_e, incl_c, _ = _segmented_scan(e_t, c_t, plan_all.is_first)
+    ins_s = v_sorted & (ks == OpKind.INSERT)
+    upd_s = v_sorted & (ks == OpKind.UPDATE)
+    del_s = v_sorted & (ks == OpKind.DELETE)
     # incoming (pre-window) state per sorted element's slot (shard-local)
     slot = jnp.clip(keys[perm] - base, 0, cfg.n_slots - 1)
     p = state.ptr[slot]
     e_init = p != NULL_PTR
     v_init = jnp.where(e_init, state.heap[jnp.clip(p, 0)], _NONE)
-    # state BEFORE each op: exclusive scan = shifted inclusive, reset at heads
-    prev_e = jnp.roll(incl_e, 1, axis=0)
-    prev_c = jnp.roll(incl_c, 1, axis=0)
-    e_before, v_before = _apply(prev_e, prev_c, e_init, v_init)
-    e_before = jnp.where(plan_all.is_first, e_init, e_before)
-    v_before = jnp.where(plan_all.is_first, v_init, v_before)
+    # existence BEFORE each op: the last INSERT (sets present) or DELETE
+    # (sets absent) strictly before it in its run; else the slot's
+    # pre-window bit.  UPDATE/SEARCH never flip existence.
+    setcode = jnp.where(ins_s, jnp.int32(1),
+                        jnp.where(del_s, jnp.int32(0), jnp.int32(-1)))
+    g_excl = _last_before(setcode >= 0, 2 * idx + setcode)
+    has = (g_excl >= 0) & ((g_excl >> 1) >= seg_start)
+    e_before = jnp.where(has, (g_excl & 1) == 1, e_init)
+    # value BEFORE each op: the last value-writing event strictly before it
+    # (INSERT into empty / UPDATE of occupied write the payload, successful
+    # DELETE writes the tombstone); else the slot's pre-window value.
+    w_ev = (ins_s & ~e_before) | ((upd_s | del_s) & e_before)
+    val_w = jnp.where(del_s, _NONE, vals)
+    gv_excl = _last_before(w_ev, idx)
+    hasv = (gv_excl >= 0) & (gv_excl >= seg_start)
+    v_before = jnp.where(hasv, val_w[jnp.clip(gv_excl, 0)], v_init)
     # per-op success / search results (sorted order)
-    ks = kinds[perm]
     ok_s = jnp.where(ks == OpKind.SEARCH, e_before,
             jnp.where(ks == OpKind.INSERT, ~e_before,
              jnp.where((ks == OpKind.UPDATE) | (ks == OpKind.DELETE), e_before, False)))
     ok_s = ok_s & v_sorted
     val_s = jnp.where((ks == OpKind.SEARCH) & e_before & v_sorted,
                       v_before, _NONE)
-    # state AFTER the last op of each queue -> new slot contents
-    e_fin, v_fin = _apply(incl_e, incl_c, e_init, v_init)
+    # state AFTER each op (at run tails: the new slot contents)
+    e_fin = jnp.where(setcode >= 0, setcode == 1, e_before)
+    v_fin = jnp.where(w_ev, val_w, v_before)
     seg_changed = ok_s & (ks != OpKind.SEARCH)          # any successful IDU
-    # segment ids for reductions
-    seg = jnp.cumsum(plan_all.is_first.astype(jnp.int32)) - 1
-    seg_any_write = jax.ops.segment_max(seg_changed.astype(jnp.int32), seg,
-                                        num_segments=b).astype(bool)
+    # per-run reductions via prefix sums gathered at run bounds
+    sc_i = seg_changed.astype(jnp.int32)
+    cw = jnp.cumsum(sc_i)
+    seg_any_write = (cw[seg_end] - (cw - sc_i)[seg_start]) > 0
     # ---- 2. commit final slot states (one out-of-place write per queue) ----
     # Out-of-bounds indices with mode="drop" mask out non-committing lanes.
-    tail = plan_all.is_last & seg_any_write[seg] & v_sorted
+    tail = plan_all.is_last & seg_any_write & v_sorted
     oob_h, oob_s = jnp.int32(cfg.heap_slots), jnp.int32(cfg.n_slots)
     n_commits = jnp.sum(tail.astype(jnp.int32))
     commit_rank = jnp.cumsum(tail.astype(jnp.int32)) - 1
@@ -318,10 +312,12 @@ def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
     new_ptr_val = jnp.where(e_fin, loc, NULL_PTR)
     ptr = state.ptr.at[jnp.where(tail, slot, oob_s)].set(new_ptr_val, mode="drop")
     # version: +1 per successful DELETE (mod 16 — the 4-bit field of Fig 8)
-    del_succ = (ks == OpKind.DELETE) & ok_s
-    dver = jax.ops.segment_sum(del_succ.astype(jnp.int32), seg, num_segments=b)
+    del_succ = del_s & ok_s
+    ds_i = del_succ.astype(jnp.int32)
+    cd = jnp.cumsum(ds_i)
+    run_del = cd[seg_end] - (cd - ds_i)[seg_start]
     ver = (state.ver.at[jnp.where(plan_all.is_last, slot, oob_s)]
-           .add(dver[seg], mode="drop")) % 16
+           .add(run_del, mode="drop")) % 16
 
     # ---- 3. synchronization-mode decision (CIDER credit split, §4.3) ----
     # Decided on the FULL window (upd_full, global keys): every shard's
@@ -341,11 +337,33 @@ def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
     # combined ops never leave the CN.  CIDER's pessimistic path does NOT
     # pre-filter: every client enqueues in the *global* MCS queue (Fig 7),
     # and global WC subsumes local WC.
-    loc_exec_opt = wc.local_executors(keys, cn, pos, opt_upd) if cfg.local_wc else opt_upd
-    if cfg.mode == SyncMode.CIDER or not cfg.local_wc:
+    # Two bit-identical groupings (DESIGN.md §10.2): with a static CN count
+    # in scope (the liveness plane's shape — always true on the fused
+    # runner/bench path) each masked subset costs one O(B) scatter-max over
+    # (key, cn) cells; otherwise one (key, CN, pos) sort over the owned
+    # window serves every subset — both executor masks are subsets of
+    # valid_o, so group_last on the shared plan matches a dedicated
+    # local_executors sort per mask.
+    n_cns_static = None
+    for liveness in (alive, died):
+        if liveness is not None:
+            n_cns_static = jnp.asarray(liveness).shape[0]
+            break
+    if n_cns_static is not None:
+        def _group_last(mask):
+            return wc.local_executors_scatter(keys, cn, pos, mask,
+                                              cfg.n_slots, n_cns_static, base)
+    else:
+        gplan = wc.plan_groups(keys, cn, pos, valid_o) if cfg.local_wc else None
+
+        def _group_last(mask):
+            return wc.group_last(gplan, mask)
+    loc_exec_opt = _group_last(opt_upd) if cfg.local_wc else opt_upd
+    if cfg.mode in (SyncMode.CIDER, SyncMode.OSYNC) or not cfg.local_wc:
+        # CIDER: global WC subsumes local; OSYNC: pess is statically empty
         loc_exec_pess = pess
     else:
-        loc_exec_pess = wc.local_executors(keys, cn, pos, pess)
+        loc_exec_pess = _group_last(pess)
 
     # ---- 5. per-mode I/O metering ------------------------------------------
     i64 = jnp.int32
@@ -390,7 +408,10 @@ def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
         opt_queue = loc_exec_opt | is_delete
     else:
         opt_queue = loc_exec_opt
-    plan_o = wc.per_key_stats(keys, pos, opt_queue)
+    # opt_queue/loc_exec_pess ⊆ valid_o, so their queue statistics fall out
+    # of plan_all's existing sort (stats_from_plan, DESIGN.md §10.2) —
+    # bit-identical to per_key_stats, minus the extra lexsorts.
+    plan_o = wc.stats_from_plan(plan_all, opt_queue)
     m_opt_writes = s(loc_exec_opt)                   # DELETEs write no heap
     writes += m_opt_writes
     cas += s(opt_queue) + plan_o.retry_sum
@@ -405,7 +426,7 @@ def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
     # pessimistic subset
     m_pe = s(loc_exec_pess)                          # effective queued writers
     if cfg.mode == SyncMode.SPIN:
-        plan_p = wc.per_key_stats(keys, pos, loc_exec_pess)
+        plan_p = wc.stats_from_plan(plan_all, loc_exec_pess)
         polls = _backoff_polls(plan_p.rank_of * 3, cfg.backoff_cap)
         polls_sum = s(jnp.where(loc_exec_pess, polls, 0))
         writes += m_pe
@@ -418,14 +439,14 @@ def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
         writes += m_pe
         cas += 2 * m_pe                              # enqueue masked-CAS + ptr CAS
         faa += m_pe                                  # epoch release
-        plan_p = wc.per_key_stats(keys, pos, loc_exec_pess)
+        plan_p = wc.stats_from_plan(plan_all, loc_exec_pess)
         cn_msgs += 2 * s(jnp.where(loc_exec_pess, (plan_p.mult_of > 1), 0))
         mn_bytes += m_pe * (cfg.value_bytes + 2 * cfg.ptr_bytes + 8)
         per_op_batch = jnp.where(loc_exec_pess, 1, per_op_batch)
         per_op_rank = jnp.where(loc_exec_pess, plan_p.rank_of, per_op_rank)
     elif cfg.mode == SyncMode.CIDER:
         # global WC: all queued writers on a key collapse to ONE executed write
-        plan_p = wc.per_key_stats(keys, pos, loc_exec_pess)
+        plan_p = wc.stats_from_plan(plan_all, loc_exec_pess)
         is_exec = loc_exec_pess & plan_p.is_tail     # queue tail = executor
         n_q = s(is_exec)                             # number of wait queues
         multi = loc_exec_pess & (plan_p.mult_of > 1)
@@ -479,18 +500,22 @@ def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
                 # only the local executor of each (key, CN) UPDATE group had
                 # left the crashed CN for the memory pool; DELETEs are never
                 # locally combined (they lock independently on the live path
-                # too), so each dead DELETE strands its own node
+                # too), so each dead DELETE strands its own node.  `died`
+                # is in scope here, so the static-CN scatter grouping always
+                # applies — no extra sort on the recovery plane.
                 dead_upd = dead_w & (kinds == OpKind.UPDATE)
-                dead_node = (wc.local_executors(keys, cn, pos, dead_upd)
+                dead_node = (_group_last(dead_upd)
                              | (dead_w & (kinds == OpKind.DELETE)))
             else:
                 dead_node = dead_w
-            stats_dead = wc.per_key_stats(keys, pos, dead_node)
-            per_key_add = (stats_dead.mult_of if cfg.mode == SyncMode.MCS
-                           else jnp.minimum(stats_dead.mult_of, 1))
-            add_slot = jnp.zeros((cfg.n_slots,), jnp.int32).at[
-                jnp.where(stats_dead.is_tail, slot_u, cfg.n_slots)
-            ].add(jnp.where(stats_dead.is_tail, per_key_add, 0), mode="drop")
+            # stranded-node count per slot: dead nodes are keyed by slot
+            # already, so the per-key multiplicity-at-tail reduction the
+            # sort-based stats would compute IS this one scatter-add
+            # (MCS strands the whole chain; SPIN/CIDER one word/entry)
+            cnt = jnp.zeros((cfg.n_slots,), jnp.int32).at[slot_u].add(
+                dead_node.astype(jnp.int32))
+            add_slot = (cnt if cfg.mode == SyncMode.MCS
+                        else jnp.minimum(cnt, 1))
         tot = state.stranded + add_slot
         if cfg.mode != SyncMode.MCS:
             tot = jnp.minimum(tot, 1)      # one lock word/entry per key
@@ -525,16 +550,18 @@ def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
             mn_bytes += polls_lease * cfg.ptr_bytes
             per_op_retries = per_op_retries + lease_polls
 
-    # ---- 5c. SCAN reader probes (range reads, DESIGN.md §9) ---------------
+    # ---- 5c. SCAN reader probes (range reads, DESIGN.md §9, §10.3) --------
     # A SCAN(key, count) expands into `count` reader probes over the
     # contiguous leaf-slot run [key, key+count), each joining its slot's wait
-    # queue *as a reader* at the scanning op's batch position.  The probes
-    # run in a second linearization pass alongside the window's writers —
-    # readers are identity transfer functions, so the pass observes exactly
-    # the per-slot state at the probe's serialization position and the main
-    # pass above is untouched.  Probes outside [slot_base, slot_base +
-    # n_slots) belong to another shard (or fall off the keyspace end): each
-    # shard counts its own sub-run and the dist psum reassembles the rows.
+    # queue *as a reader* at the scanning op's batch position.  ONE sort of
+    # the combined writer+probe lanes feeds the fused scan_probe pass, which
+    # yields both the existence each probe observes at its serialization
+    # position AND its wait rank behind exclusive lock holders — the second
+    # linearization sweep and the separate reader_waits sort this step used
+    # to pay are gone (DESIGN.md §10.3).  Probes outside [slot_base,
+    # slot_base + n_slots) belong to another shard (or fall off the keyspace
+    # end): each shard counts its own sub-run and the dist psum reassembles
+    # the rows.
     if cfg.scan_max > 0:
         ns = cfg.scan_max
         is_scan = (kinds == OpKind.SCAN) & valid
@@ -549,27 +576,26 @@ def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
         pv = p_in.reshape(b * ns)
         keys_c = jnp.concatenate([keys, keys_p])
         pos_c = jnp.concatenate([pos, pos_p])
-        kinds_c = jnp.concatenate(
-            [kinds, jnp.full((b * ns,), OpKind.SEARCH, jnp.int32)])
-        values_c = jnp.concatenate([values, jnp.zeros((b * ns,), jnp.int32)])
         tvalid = jnp.concatenate([valid_o, pv])
-        plan_c = wc.plan_combine(keys_c, pos_c, tvalid)
+        plan_c = wc.plan_combine(keys_c, pos_c, tvalid,
+                                 backend=cfg.kernel_backend)
         pc = plan_c.perm
         bc = b * (1 + ns)
-        e_tc, c_tc = _op_transfer(kinds_c[pc], values_c[pc])
-        v_sc = tvalid[pc]
-        e_tc = jnp.where(v_sc[:, None], e_tc,
-                         jnp.broadcast_to(jnp.array([0, 1], jnp.int32), (bc, 2)))
-        c_tc = jnp.where(v_sc[:, None], c_tc, jnp.full((bc, 2), _KEEP, jnp.int32))
-        incl_ec, incl_cc, _ = _segmented_scan(e_tc, c_tc, plan_c.is_first)
+        # existence transfers: only this window's INSERT/DELETE lanes set the
+        # bit; probes (readers) and UPDATEs are identity — so the probe pass
+        # needs no value plane at all
+        setcode_c = jnp.concatenate(
+            [jnp.where(is_insert, jnp.int32(1),
+                       jnp.where(is_delete, jnp.int32(0), jnp.int32(-1))),
+             jnp.full((b * ns,), -1, jnp.int32)])
+        lockw = loc_exec_pess | is_delete             # exclusive lock holders
+        writer_c = jnp.concatenate([lockw, jnp.zeros((b * ns,), bool)])
         slot_c = jnp.clip(keys_c[pc] - base, 0, cfg.n_slots - 1)
-        ptr_c = state.ptr[slot_c]
-        e_init_c = ptr_c != NULL_PTR
-        v_init_c = jnp.where(e_init_c, state.heap[jnp.clip(ptr_c, 0)], _NONE)
-        prev_ec = jnp.roll(incl_ec, 1, axis=0)
-        prev_cc = jnp.roll(incl_cc, 1, axis=0)
-        e_bc, _ = _apply(prev_ec, prev_cc, e_init_c, v_init_c)
-        e_bc = jnp.where(plan_c.is_first, e_init_c, e_bc)
+        e_init_c = state.ptr[slot_c] != NULL_PTR
+        e_bc, waits_s = _probe_sweep(plan_c.keys_sorted, setcode_c[pc],
+                                     writer_c[pc], e_init_c,
+                                     cfg.kernel_backend)
+        v_sc = tvalid[pc]
         e_probe = jnp.zeros((bc,), bool).at[pc].set(e_bc & v_sc)
         hit = e_probe[b:].reshape(b, ns) & p_in
         per_op_rows = jnp.sum(hit.astype(jnp.int32), axis=1)
@@ -608,12 +634,11 @@ def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
             mn_bytes += n_hot * (cfg.lock_bytes + 8)
         if cfg.mode != SyncMode.OSYNC:
             # wait rank of the anchor-leaf reader behind exclusive holders
-            # (queue order == batch position now includes reader ranks)
-            lockw = loc_exec_pess | is_delete
-            waits = wc.reader_waits(
-                keys_c, pos_c,
-                jnp.concatenate([jnp.zeros((b,), bool), pv]),
-                jnp.concatenate([lockw, jnp.zeros((b * ns,), bool)]))
+            # (queue order == batch position now includes reader ranks) —
+            # already computed by the fused pass above; just unsort it
+            readers_s = jnp.concatenate([jnp.zeros((b,), bool), pv])[pc]
+            waits = jnp.zeros((bc,), jnp.int32).at[pc].set(
+                jnp.where(readers_s, waits_s, 0))
             per_op_rank = jnp.where(p_in[:, 0], waits[b:].reshape(b, ns)[:, 0],
                                     per_op_rank)
 
@@ -626,11 +651,19 @@ def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
             pess_fb, batch_fb = loc_exec_pess, per_op_batch
             opt_fb, retry_fb = loc_exec_opt | is_insert, per_op_retries
         else:
+            # full-window masks are subsets of `valid` (not valid_o), so the
+            # replicated credit plane pays one full-validity plan of each
+            # kind and derives both feedback stats from it (DESIGN.md §10.2)
             opt_upd_full = upd_full & ~pess_full
-            loc_opt_full = (wc.local_executors(keys, cn, pos, opt_upd_full)
-                            if cfg.local_wc else opt_upd_full)
-            plan_p_fb = wc.per_key_stats(keys, pos, pess_full)
-            plan_o_fb = wc.per_key_stats(keys, pos, loc_opt_full)
+            if cfg.local_wc:
+                gplan_full = wc.plan_groups(keys, cn, pos, valid)
+                loc_opt_full = wc.group_last(gplan_full, opt_upd_full)
+            else:
+                loc_opt_full = opt_upd_full
+            plan_full = wc.plan_combine(keys, pos, valid,
+                                        backend=cfg.kernel_backend)
+            plan_p_fb = wc.stats_from_plan(plan_full, pess_full)
+            plan_o_fb = wc.stats_from_plan(plan_full, loc_opt_full)
             pess_fb = pess_full
             batch_fb = jnp.where(pess_full, plan_p_fb.mult_of, 1)
             opt_fb = loc_opt_full | ((kinds == OpKind.INSERT) & valid)

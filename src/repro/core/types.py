@@ -176,3 +176,12 @@ class EngineConfig:
     # expands each SCAN into `scan_max` reader probes that join the per-key
     # wait queues at the scanning op's batch position.
     scan_max: int = 0
+    # Kernel dispatch seam (DESIGN.md §10): which implementation of the
+    # sorted-run sweeps (wc_combine, scan_probe) the engine's consumers use.
+    # "auto" = the compiled Pallas kernels on TPU, the jnp reference
+    # elsewhere; "pallas" = force the kernels (interpret mode off-TPU — CI
+    # exercises the exact kernel dataflow); "jnp" = force the reference.
+    # All three are bit-identical by contract and by test (tests/
+    # test_backend.py).  The config is hashable/static, so the choice flows
+    # through jit, the fused runner scan, and dist's per-shard config cache.
+    kernel_backend: str = "auto"

@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the fused SCAN reader-probe pass.
+
+DESIGN.md §10.3: one prefix sweep over lanes sorted by (key, pos) yields,
+per lane, the existence bit observed *just before* it linearizes and the
+number of lock-holding writer lanes strictly ahead of it in its key run —
+the two quantities the engine's SCAN step needs, without a second sort.
+
+Contract (all arrays length N, sorted by (key, pos); invalid lanes carry
+the +inf key sentinel and setcode -1):
+
+* ``keys_sorted`` int32 — run grouping key;
+* ``setcode``     int32 ∈ {-1: keep, 0: set-absent, 1: set-present} — the
+  lane's existence transfer (INSERT→1, successful DELETE→0, else -1);
+* ``writer``      bool  — lane holds the slot lock (counts toward waits);
+* ``e_init``      bool  — slot existence at window start (read when no
+  setter precedes the lane in its run).
+
+Returns ``(e_before, waits)``: bool/int32, both length N.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["scan_probe_ref"]
+
+
+def scan_probe_ref(keys_sorted, setcode, writer, e_init):
+    n = keys_sorted.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    is_first = jnp.concatenate(
+        [jnp.ones((1,), bool), keys_sorted[1:] != keys_sorted[:-1]])
+    start = jax.lax.cummax(jnp.where(is_first, idx, 0))
+    # last setter strictly before me, in-run: encode (2*idx + bit) and take
+    # a running max — the decode survives iff the argmax sits in my run.
+    enc = jnp.where(setcode >= 0, 2 * idx + setcode, -1)
+    g = jax.lax.cummax(enc)
+    g_excl = jnp.concatenate([jnp.full((1,), -1, jnp.int32), g[:-1]])
+    has = (g_excl >= 0) & ((g_excl >> 1) >= start)
+    e_before = jnp.where(has, (g_excl & 1) == 1, e_init)
+    # writers strictly ahead of me in my run
+    w_i = writer.astype(jnp.int32)
+    cex = jnp.cumsum(w_i) - w_i
+    base = jax.lax.cummax(jnp.where(is_first, cex, 0))
+    waits = cex - base
+    return e_before, waits

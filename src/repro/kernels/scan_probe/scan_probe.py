@@ -1,0 +1,94 @@
+"""Fused SCAN reader-probe Pallas kernel: one VMEM pass over lanes SORTED
+by (key, pos) emitting, per lane, the existence bit observed just before it
+(``e_before``) and the count of writer lanes strictly ahead in its key run
+(``waits``) — the engine's step-5c probe resolution and ``reader_waits``
+rank in a single sweep (DESIGN.md §10.3), replacing two full sorts.
+
+Cross-block runs use the same sequential-grid carry idiom as wc_combine
+(DESIGN.md §2.1): TPU grid execution is ordered, so block i reads the SMEM
+carry block i-1 wrote.  The carry holds (previous block's last key, the
+last setcode seen in its still-open run [-1 if none], the writer count so
+far in that run).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -2**31 + 1              # python int: jnp constants would be captured
+
+
+def _kernel(keys_ref, set_ref, writer_ref, einit_ref,
+            eb_ref, waits_ref, carry_ref, *, block: int):
+    bi = pl.program_id(0)
+
+    @pl.when(bi == 0)
+    def _init():
+        carry_ref[0] = jnp.int32(_NEG)   # "no previous key"
+        carry_ref[1] = jnp.int32(-1)     # open run has no setter yet
+        carry_ref[2] = jnp.int32(0)      # writers so far in open run
+
+    k = keys_ref[...]                    # (block,) int32
+    sc = set_ref[...]                    # (block,) int32 in {-1, 0, 1}
+    w = writer_ref[...]                  # (block,) int32 in {0, 1}
+    ei = einit_ref[...]                  # (block,) int32 in {0, 1}
+    prev_key = carry_ref[0]
+    carry_set = carry_ref[1]
+    carry_w = carry_ref[2]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (block, 1), 0)[:, 0]
+    kprev = jnp.where(idx == 0, prev_key, jnp.roll(k, 1))
+    first = k != kprev
+    start = jax.lax.cummax(jnp.where(first, idx, jnp.int32(_NEG)))
+    in_carry = start == _NEG             # run continues from previous block
+    start_c = jnp.where(in_carry, 0, start)
+    # last setter strictly before me, within this block and run
+    enc = jnp.where(sc >= 0, 2 * idx + sc, -1)
+    g = jax.lax.cummax(enc)
+    g_excl = jnp.where(idx == 0, jnp.int32(-1), jnp.roll(g, 1))
+    has = (g_excl >= 0) & ((g_excl >> 1) >= start_c)
+    e_b = jnp.where(has, (g_excl & 1) == 1,
+                    jnp.where(in_carry & (carry_set >= 0),
+                              carry_set == 1, ei == 1))
+    # writers strictly ahead of me in my run
+    cw = jnp.cumsum(w)
+    cex = cw - w
+    base = jax.lax.cummax(jnp.where(first, cex, 0))
+    waits = cex - jnp.where(in_carry, 0, base) + jnp.where(in_carry, carry_w, 0)
+    eb_ref[...] = e_b
+    waits_ref[...] = waits
+    # carry out: tail lane's key + its run's last setcode and writer count
+    t = block - 1
+    g_inc = g[t]
+    has_t = (g_inc >= 0) & ((g_inc >> 1) >= start_c[t])
+    carry_ref[0] = k[t]
+    carry_ref[1] = jnp.where(has_t, g_inc & 1,
+                             jnp.where(in_carry[t], carry_set, jnp.int32(-1)))
+    carry_ref[2] = waits[t] + w[t]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def scan_probe(keys_sorted, setcode, writer, e_init, *,
+               block=1024, interpret=False):
+    """All inputs (N,) int32, N a multiple of ``block``, sorted by (key,
+    pos).  ``writer``/``e_init`` are 0/1 ints (bool loads are avoided in
+    the kernel body).  Returns ``(e_before bool, waits int32)``."""
+    n = keys_sorted.shape[0]
+    block = min(block, n)
+    n_blocks = n // block
+    kernel = functools.partial(_kernel, block=block)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    e_before, waits = pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[spec, spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.bool_),
+                   jax.ShapeDtypeStruct((n,), jnp.int32)],
+        scratch_shapes=[pltpu.SMEM((3,), jnp.int32)],
+        interpret=interpret,
+    )(keys_sorted, setcode, writer, e_init)
+    return e_before, waits

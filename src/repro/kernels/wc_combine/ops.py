@@ -1,7 +1,10 @@
 """Jit'd wrapper for wc_combine.
 
 DESIGN.md §2.1 (the combine primitive): public jit wrapper for the
-wc_combine kernel.
+wc_combine kernel.  Non-block-multiple N is padded with the +inf
+invalid-key sentinel and the tail masked off (DESIGN.md §10.1), so odd
+batch sizes (elastic-membership runs shrink B) dispatch instead of
+crashing.
 """
 from __future__ import annotations
 
@@ -13,14 +16,28 @@ from repro.kernels.wc_combine.wc_combine import wc_combine
 
 __all__ = ["wc_combine_op", "wc_combine_ref"]
 
+_BIG = 2**31 - 1   # python int: this module may first be imported inside a jit trace
+
 
 def wc_combine_op(keys_sorted, block=1024, interpret=None):
     if keys_sorted.dtype != jnp.int32:
         keys_sorted = keys_sorted.astype(jnp.int32)
     n = keys_sorted.shape[0]
     block = min(block, n)
-    if n % block:
-        raise ValueError(f"N={n} not divisible by block={block}")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    return wc_combine(keys_sorted, block=block, interpret=interpret)
+    pad = (-n) % block
+    if pad:
+        # Pad with the +inf sentinel: sorted order is preserved (no real key
+        # exceeds it) and the padding either opens its own run or extends a
+        # trailing sentinel run — either way the real prefix's is_first/rank
+        # are untouched.  Only is_last[n-1] can be swallowed (when padding
+        # extends the final run), so restore it after slicing.
+        keys_sorted = jnp.concatenate(
+            [keys_sorted, jnp.full((pad,), _BIG, jnp.int32)])
+    first, last, rank = wc_combine(keys_sorted, block=block,
+                                   interpret=interpret)
+    if pad:
+        first, last, rank = first[:n], last[:n], rank[:n]
+        last = last.at[n - 1].set(True)
+    return first, last, rank

@@ -1,0 +1,147 @@
+"""Kernel-dispatch seam bit-identity (DESIGN.md §10): the Pallas kernels
+(``kernel_backend="pallas"``, interpret mode on CPU) and the jnp reference
+(``"jnp"``) must produce bit-identical engine output — StoreState, CreditState,
+Results, IOMetrics — for all four SyncModes, through ``apply_batch``, the fused
+``run_windows`` scan, and the 4-way ``run_windows_sharded`` mesh path.  SCAN
+lanes are included so the fused reader-probe kernel (kernels/scan_probe/) is on
+the hot path, not just wc_combine."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import runner
+from repro.core.credits import credit_init
+from repro.core.engine import apply_batch, populate, store_init, store_view
+from repro.core.types import EngineConfig, OpBatch, OpKind, SyncMode
+from repro.dist import store as dstore
+from repro.launch.mesh import make_local_mesh
+
+MODES = [SyncMode.OSYNC, SyncMode.SPIN, SyncMode.MCS, SyncMode.CIDER]
+W, B, N_SLOTS, HEAP, N_CNS = 3, 128, 64, 1024, 4
+SCAN_MAX = 4
+
+
+def _cfg(mode, backend, **kw):
+    return EngineConfig(n_slots=N_SLOTS, heap_slots=HEAP, mode=mode,
+                        scan_max=SCAN_MAX, kernel_backend=backend, **kw)
+
+
+def _ops(seed=0):
+    """(W, B) op arrays: every kind incl. SCAN, plus a strided cross-CN hot
+    key so CIDER's pessimistic global-WC path actually runs."""
+    rng = np.random.default_rng(seed)
+    kinds = rng.choice(
+        [OpKind.SEARCH, OpKind.INSERT, OpKind.UPDATE, OpKind.DELETE,
+         OpKind.SCAN],
+        size=(W, B), p=(0.25, 0.15, 0.3, 0.15, 0.15)).astype(np.int32)
+    keys = rng.integers(0, N_SLOTS, (W, B)).astype(np.int32)
+    values = rng.integers(0, 10_000, (W, B)).astype(np.int32)
+    # SCAN counts ride `values`; keep them inside [1, scan_max]
+    values = np.where(kinds == OpKind.SCAN,
+                      rng.integers(1, SCAN_MAX + 1, (W, B)), values)
+    keys[:, ::4] = 5
+    kinds[:, ::4] = OpKind.UPDATE
+    return kinds, keys, values
+
+
+def _init(cfg):
+    rng = np.random.default_rng(1)
+    pop_keys = rng.choice(N_SLOTS, size=N_SLOTS // 2, replace=False)
+    pop_vals = rng.integers(0, 10_000, pop_keys.shape[0])
+    return (populate(cfg, store_init(cfg), pop_keys, pop_vals),
+            credit_init(256), pop_keys, pop_vals)
+
+
+def _assert_trees_equal(t1, t2, label):
+    l1, l2 = jax.tree.leaves(t1), jax.tree.leaves(t2)
+    assert len(l1) == len(l2)
+    for a, b in zip(l1, l2):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b), err_msg=label)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_apply_batch_backend_identity(mode):
+    kinds, keys, values = _ops()
+    out = {}
+    for backend in ("jnp", "pallas"):
+        cfg = _cfg(mode, backend)
+        state, credits, _, _ = _init(cfg)
+        ress, ios = [], []
+        for w in range(W):
+            batch = OpBatch.make(kinds[w], keys[w], values[w], n_cns=N_CNS)
+            state, credits, res, io = apply_batch(cfg, state, credits, batch)
+            ress.append(res)
+            ios.append(io)
+        out[backend] = (state, credits, ress, ios)
+    _assert_trees_equal(out["jnp"], out["pallas"], f"apply_batch {mode.name}")
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_run_windows_backend_identity(mode):
+    kinds, keys, values = _ops(seed=2)
+    stream = runner.make_stream(kinds, keys, values, n_cns=N_CNS)
+    out = {}
+    for backend in ("jnp", "pallas"):
+        cfg = _cfg(mode, backend)
+        state, credits, _, _ = _init(cfg)
+        out[backend] = runner.run_windows(cfg, state, credits, stream,
+                                          io_per_window=True)
+    _assert_trees_equal(out["jnp"], out["pallas"], f"run_windows {mode.name}")
+
+
+@pytest.mark.parametrize("mode", [SyncMode.OSYNC, SyncMode.CIDER])
+def test_run_windows_sharded_backend_identity(mode):
+    mesh = make_local_mesh(data=4)   # conftest pins 8 host devices
+    kinds, keys, values = _ops(seed=3)
+    stream = runner.make_stream(kinds, keys, values, n_cns=N_CNS)
+    out = {}
+    for backend in ("jnp", "pallas"):
+        cfg = _cfg(mode, backend)
+        _, _, pop_keys, pop_vals = _init(cfg)
+        sst = dstore.sharded_populate(
+            cfg, 4, dstore.sharded_store_init(cfg, 4), pop_keys, pop_vals)
+        st, cr, res, io = dstore.run_windows_sharded(
+            cfg, mesh, sst, credit_init(256), stream, io_per_window=True)
+        view = dstore.sharded_store_view(cfg, 4, st)
+        out[backend] = (st, cr, res, io, view)
+    _assert_trees_equal(out["jnp"], out["pallas"], f"sharded {mode.name}")
+
+
+def test_auto_resolves_off_tpu():
+    """"auto" off-TPU must mean the jnp reference (no interpret overhead on
+    the CI hot path) — identical results to an explicit "jnp" config."""
+    from repro.core.combine import resolve_backend
+    impl, interpret = resolve_backend("auto")
+    if jax.default_backend() != "tpu":
+        assert impl == "jnp"
+    impl_p, interpret_p = resolve_backend("pallas")
+    assert impl_p == "pallas"
+    if jax.default_backend() != "tpu":
+        assert interpret_p
+
+
+def test_bad_backend_rejected():
+    from repro.core.combine import resolve_backend
+    with pytest.raises(ValueError):
+        resolve_backend("cuda-graphs")
+
+
+def test_store_view_matches_across_backends():
+    cfg_j = _cfg(SyncMode.CIDER, "jnp")
+    cfg_p = _cfg(SyncMode.CIDER, "pallas")
+    kinds, keys, values = _ops(seed=4)
+    outs = []
+    for cfg in (cfg_j, cfg_p):
+        state, credits, _, _ = _init(cfg)
+        for w in range(W):
+            batch = OpBatch.make(kinds[w], keys[w], values[w], n_cns=N_CNS)
+            state, credits, _, _ = apply_batch(cfg, state, credits, batch)
+        outs.append(store_view(state))
+    for a, b in zip(outs[0], outs[1]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,75 @@
+"""Unit tests for the CI perf gate's pure check logic — synthetic dicts, no
+benchmark runs: the modeled-mops floor/ordering checks and the new
+wall-clock floors (gated on backend provenance, DESIGN.md §10)."""
+from __future__ import annotations
+
+from benchmarks.check_regression import check, check_wall
+
+PROV = {"jax_backend": "cpu", "kernel_impl": "jnp", "kernel_interpret": False}
+
+
+def _engine(mops, prov=PROV):
+    out = {"config": {"provenance": dict(prov)}}
+    for m, v in mops.items():
+        out[m] = {"throughput_mops": v}
+    return out
+
+
+def _wall_baseline(mops, prov=PROV):
+    return {"_wall_engine": {"provenance": dict(prov),
+                             "throughput_mops": dict(mops)}}
+
+
+FLOORS = {"OSYNC": 0.8, "SPIN": 0.5, "MCS": 0.5, "CIDER": 0.6}
+
+
+def test_wall_passes_at_floor():
+    assert check_wall(_engine(FLOORS), _wall_baseline(FLOORS), 0.5) == []
+
+
+def test_wall_fails_on_injected_slowdown():
+    slow = {m: v / 3 for m, v in FLOORS.items()}   # 3x slower than the floor
+    fails = check_wall(_engine(slow), _wall_baseline(FLOORS), 0.5)
+    assert len(fails) == 4
+    assert all("wall/engine/" in f for f in fails)
+
+
+def test_wall_tolerance_band():
+    # 40% below the floor is inside the default 50% band; 60% is not
+    near = {m: v * 0.6 for m, v in FLOORS.items()}
+    far = {m: v * 0.4 for m, v in FLOORS.items()}
+    assert check_wall(_engine(near), _wall_baseline(FLOORS), 0.5) == []
+    assert len(check_wall(_engine(far), _wall_baseline(FLOORS), 0.5)) == 4
+
+
+def test_wall_skipped_on_backend_mismatch(capsys):
+    """A TPU-recorded floor must not gate (or pass) a CPU run — skip."""
+    tpu = {"jax_backend": "tpu", "kernel_impl": "pallas",
+           "kernel_interpret": False}
+    slow = {m: v / 10 for m, v in FLOORS.items()}
+    fails = check_wall(_engine(slow), _wall_baseline(FLOORS, prov=tpu), 0.5)
+    assert fails == []
+    assert "SKIPPED" in capsys.readouterr().out
+
+
+def test_wall_missing_baseline_fails():
+    fails = check_wall(_engine(FLOORS), {}, 0.5)
+    assert len(fails) == 1 and "_wall_engine" in fails[0]
+
+
+def test_modeled_check_still_gates():
+    actual = {"engine": {"OSYNC": 1.0, "SPIN": 1.0, "MCS": 1.0,
+                         "CIDER": 2.0}}
+    baseline = {"engine": {"CIDER": 2.0}}
+    assert check(actual, baseline, 0.10) == []
+    # regression past tolerance
+    worse = {"engine": {**actual["engine"], "CIDER": 1.5}}
+    assert any("regressed" in f for f in check(worse, baseline, 0.10))
+    # losing the ordering
+    lost = {"engine": {**actual["engine"], "OSYNC": 2.5}}
+    assert any("no longer leads" in f for f in check(lost, baseline, 0.10))
+    # baselined benchmark vanishing from the JSONs is a failure, not a pass
+    assert any("no matching benchmark" in f
+               for f in check({}, baseline, 0.10))
+    # underscore-prefixed keys (e.g. _wall_engine) are not benchmarks
+    assert check(actual, {**baseline, "_wall_engine": {}}, 0.10) == []

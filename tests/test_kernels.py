@@ -12,6 +12,7 @@ from repro.kernels.flash_attention.ops import (flash_attention_op,
                                                flash_attention_ref)
 from repro.kernels.paged_attention.ops import (paged_attention_op,
                                                paged_attention_ref)
+from repro.kernels.scan_probe.ops import scan_probe_op, scan_probe_ref
 from repro.kernels.wc_combine.ops import wc_combine_op, wc_combine_ref
 
 try:
@@ -62,7 +63,11 @@ def test_paged_attention_sweep(b, h, kh, d, page, np_, dtype):
                                np.asarray(ref, np.float32), rtol=tol, atol=tol)
 
 
-@pytest.mark.parametrize("n,block", [(256, 64), (1024, 128), (64, 64)])
+@pytest.mark.parametrize("n,block", [
+    (256, 64), (1024, 128), (64, 64),
+    # padded-tail cases (DESIGN.md §10.1): n not a block multiple
+    (100, 64), (130, 64), (257, 128), (4100, 1024),
+])
 def test_wc_combine_sweep(n, block):
     rng = np.random.default_rng(n)
     keys = np.sort(rng.integers(0, n // 4, n)).astype(np.int32)
@@ -73,7 +78,118 @@ def test_wc_combine_sweep(n, block):
     np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
 
 
+def test_wc_combine_all_invalid():
+    """A batch of nothing but the +inf invalid-key sentinel — the padding
+    value itself — must still produce a well-formed single run."""
+    keys = np.full(100, 2**31 - 1, np.int32)
+    f, l, r = map(np.asarray,
+                  wc_combine_op(jnp.asarray(keys), block=64, interpret=True))
+    assert f.sum() == 1 and f[0]
+    assert l.sum() == 1 and l[-1]
+    np.testing.assert_array_equal(r, np.arange(100))
+
+
+def test_wc_combine_duplicate_heavy():
+    """One giant run spanning many blocks plus tiny runs at both ends."""
+    keys = np.concatenate([[0], np.full(1000, 7, np.int32), [9, 9, 11]])
+    keys = np.sort(keys).astype(np.int32)
+    f1, l1, r1 = map(np.asarray,
+                     wc_combine_op(jnp.asarray(keys), block=64, interpret=True))
+    f2, l2, r2 = map(np.asarray, wc_combine_ref(jnp.asarray(keys)))
+    np.testing.assert_array_equal(f1, f2)
+    np.testing.assert_array_equal(l1, l2)
+    np.testing.assert_array_equal(r1, r2)
+
+
+def _scan_probe_oracle(keys, setcode, writer, e_init):
+    """Brute-force per-lane oracle for the fused reader-probe pass."""
+    n = len(keys)
+    e_before = np.zeros(n, bool)
+    waits = np.zeros(n, np.int32)
+    for i in range(n):
+        e = bool(e_init[i])
+        w = 0
+        for j in range(i):
+            if keys[j] != keys[i]:
+                continue
+            if setcode[j] >= 0:
+                e = setcode[j] == 1
+            w += int(writer[j])
+        e_before[i] = e
+        waits[i] = w
+    return e_before, waits
+
+
+def _scan_probe_case(seed, n, key_space):
+    rng = np.random.default_rng(seed)
+    keys = np.sort(rng.integers(0, key_space, n)).astype(np.int32)
+    setcode = rng.choice([-1, -1, 0, 1], n).astype(np.int32)
+    writer = rng.integers(0, 2, n).astype(bool)
+    e_init = rng.integers(0, 2, n).astype(bool)
+    return keys, setcode, writer, e_init
+
+
+@pytest.mark.parametrize("n,block", [
+    (256, 64), (1024, 128), (64, 64),
+    (100, 64), (257, 128), (4100, 1024),   # padded tails
+])
+def test_scan_probe_sweep(n, block):
+    keys, setcode, writer, e_init = _scan_probe_case(n * 7 + block, n, n // 4)
+    eb1, w1 = scan_probe_op(jnp.asarray(keys), jnp.asarray(setcode),
+                            jnp.asarray(writer), jnp.asarray(e_init),
+                            block=block, interpret=True)
+    eb2, w2 = scan_probe_ref(jnp.asarray(keys), jnp.asarray(setcode),
+                             jnp.asarray(writer), jnp.asarray(e_init))
+    np.testing.assert_array_equal(np.asarray(eb1), np.asarray(eb2))
+    np.testing.assert_array_equal(np.asarray(w1), np.asarray(w2))
+    eb3, w3 = _scan_probe_oracle(keys, setcode, writer, e_init)
+    np.testing.assert_array_equal(np.asarray(eb2), eb3)
+    np.testing.assert_array_equal(np.asarray(w2), w3)
+
+
+def test_scan_probe_giant_run():
+    """One run spanning every block: the SMEM carry must thread the
+    last-setter and writer count across all block boundaries."""
+    n = 1000
+    rng = np.random.default_rng(3)
+    keys = np.zeros(n, np.int32)
+    setcode = rng.choice([-1, 0, 1], n).astype(np.int32)
+    writer = rng.integers(0, 2, n).astype(bool)
+    e_init = np.ones(n, bool)
+    eb1, w1 = scan_probe_op(jnp.asarray(keys), jnp.asarray(setcode),
+                            jnp.asarray(writer), jnp.asarray(e_init),
+                            block=64, interpret=True)
+    eb3, w3 = _scan_probe_oracle(keys, setcode, writer, e_init)
+    np.testing.assert_array_equal(np.asarray(eb1), eb3)
+    np.testing.assert_array_equal(np.asarray(w1), w3)
+
+
 if HAVE_HYP:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(33, 200),
+           st.sampled_from([1, 3, 17]))
+    def test_wc_combine_padded_property(seed, n, key_space):
+        """Arbitrary (non-block-multiple) n against the reference — the
+        padded dispatch (DESIGN.md §10.1) must be invisible."""
+        rng = np.random.default_rng(seed)
+        keys = np.sort(rng.integers(0, key_space, n)).astype(np.int32)
+        out_k = wc_combine_op(jnp.asarray(keys), block=64, interpret=True)
+        out_r = wc_combine_ref(jnp.asarray(keys))
+        for a, b in zip(out_k, out_r):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(33, 150),
+           st.sampled_from([1, 3, 17]))
+    def test_scan_probe_padded_property(seed, n, key_space):
+        keys, setcode, writer, e_init = _scan_probe_case(seed, n, key_space)
+        eb, w = scan_probe_op(jnp.asarray(keys), jnp.asarray(setcode),
+                              jnp.asarray(writer), jnp.asarray(e_init),
+                              block=64, interpret=True)
+        eb3, w3 = _scan_probe_oracle(keys, setcode, writer, e_init)
+        np.testing.assert_array_equal(np.asarray(eb), eb3)
+        np.testing.assert_array_equal(np.asarray(w), w3)
+
     @settings(max_examples=20, deadline=None)
     @given(st.integers(0, 2**31 - 1), st.sampled_from([64, 128]),
            st.sampled_from([1, 3, 17]))
