@@ -3,7 +3,7 @@ export PYTHONPATH
 
 .PHONY: test test-fast bench-smoke bench-kernels-smoke bench-ycsb-smoke \
     bench-scenarios-smoke bench-recovery-smoke check-regression lint \
-    docs-check
+    docs-check analyze typecheck
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -61,6 +61,23 @@ check-regression: bench-smoke bench-kernels-smoke bench-ycsb-smoke \
 # `DESIGN.md §N` reference cited in source docstrings must exist
 docs-check:
 	python tools/check_docs.py
+
+# static-analysis gate (DESIGN.md §11): jaxpr/HLO invariant audit (donation,
+# dtype discipline, exact collective census vs the credit-plane contract,
+# compile-cache stability), verb-bill conservation lint (every IOMetrics
+# field documented + priced or whitelisted), and the exhaustive protocol
+# race-checker (every interleaving of the 2-3 client model vs the oracle,
+# crash-at-any-step included) -> ANALYZE_REPORT.json
+analyze:
+	python tools/analyze.py
+
+# mypy over the layers with the strictest internal contracts (core + dist);
+# same graceful fallback pattern as `lint` for machines without mypy
+typecheck:
+	@command -v mypy >/dev/null 2>&1 \
+	    && mypy --config-file mypy.ini src/repro/core src/repro/dist \
+	    || { echo "mypy not installed; falling back to compileall"; \
+	         python -m compileall -q src/repro/core src/repro/dist; }
 
 lint:
 	@command -v ruff >/dev/null 2>&1 \

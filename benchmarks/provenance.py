@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import jax
 
+from repro.analysis import analysis_provenance
 from repro.core.combine import resolve_backend
 
 
@@ -24,4 +25,8 @@ def provenance(kernel_backend: str = "auto") -> dict:
         "kernel_backend": kernel_backend,
         "kernel_impl": impl,
         "kernel_interpret": interpret,
+        # which static-analysis gates (DESIGN.md §11) the generating tree
+        # was subject to — numbers from a tree whose invariant auditor
+        # didn't include a given pass aren't evidence the invariant held
+        "analysis": analysis_provenance(),
     }

@@ -1,0 +1,59 @@
+"""Static-analysis layer: prove the repro's invariants instead of sampling them.
+
+Every number this reproduction publishes rests on invariants that example
+tests can only sample — that the fused scans really donate their buffers,
+that the shard_map path issues exactly the documented collectives, that
+every ``IOMetrics`` increment is documented and priced into the cost model,
+and that the per-mode lock protocols (including the §4.6 orphan repair) are
+race-free.  This package checks each of those properties over the *whole*
+artifact — jaxpr/HLO graph, source AST, or exhaustive interleaving space —
+and ``tools/analyze.py`` gates CI on the result (``make analyze``).
+
+Three passes (DESIGN.md §11):
+
+* ``jaxpr_check`` — traces the engine/runner/dist entry points and audits
+  the closed jaxpr + compiled HLO: buffer donation, dtype discipline (no
+  f64 / weak-typed outputs), no host callbacks, the exact credit-plane
+  collective contract, and jit-cache stability across the dispatch seam.
+* ``bill_lint`` — AST conservation lint: every ``IOMetrics`` field written
+  by the engine/stores is documented in docs/METRICS.md and consumed by the
+  cost model (or explicitly whitelisted with a reason), and unsupported-op
+  rejections raise the shared ``UnsupportedOpError``.
+* ``race_check`` — an explicit-state model checker that exhaustively
+  enumerates interleavings (≤3 CNs × ≤2 keys, all OpKinds, crash at any
+  step) of the per-mode protocol machines and asserts mutual exclusion,
+  oracle-consistent serialization, and that §4.6 repair never breaks a
+  live lock.
+
+``analysis_provenance()`` is recorded into every ``BENCH_*.json`` config
+block (via ``benchmarks/provenance.py``) so committed baselines state which
+invariants they were generated under.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["ANALYSIS_VERSION", "PASSES", "Violation", "analysis_provenance"]
+
+# Bump when a pass's invariants change meaningfully — committed BENCH_*.json
+# config blocks record this so baselines state what was proven about the
+# code that generated them.
+ANALYSIS_VERSION = "1.0"
+
+PASSES = ("jaxpr_check", "bill_lint", "race_check")
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One analyzer finding.  ``passes == not violations`` everywhere."""
+    pass_name: str   # which pass found it (one of PASSES)
+    target: str      # what was audited (function, file, scenario)
+    message: str     # what is wrong, in one sentence
+
+    def __str__(self) -> str:
+        return f"[{self.pass_name}] {self.target}: {self.message}"
+
+
+def analysis_provenance() -> dict:
+    """The pass list + version stamped into BENCH_*.json config blocks."""
+    return {"version": ANALYSIS_VERSION, "passes": list(PASSES)}

@@ -128,6 +128,9 @@ def populate(cfg: EngineConfig, state: StoreState, keys, values) -> StoreState:
     keys = jnp.asarray(keys, jnp.int32)
     values = jnp.asarray(values, jnp.int32)
     n = keys.shape[0]
+    if n > cfg.heap_slots:
+        raise ValueError(
+            f"populate: {n} pairs exceed heap_slots={cfg.heap_slots}")
     loc = state.heap_top + jnp.arange(n, dtype=jnp.int32)
     heap = state.heap.at[loc].set(values)
     ptr = state.ptr.at[keys].set(loc)

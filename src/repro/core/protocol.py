@@ -88,6 +88,11 @@ class SimState:
     comb_base: jax.Array    # (H,)   "  : coordinator ticket
     comb_upto: jax.Array    # (H,)   "  : executor ticket
     epoch: jax.Array        # (H,) lock epoch (FAA'd on release, §4.6)
+    del_q: jax.Array        # (H,) ticket-assigned, unreleased DELETEs queued
+                            # on the key — gates write combining: a combined
+                            # batch completes its members WITHOUT their own
+                            # pointer CAS, which would silently swallow a
+                            # queued DELETE (found by repro.analysis.race_check)
     # ---- per-CN tables (flattened G x 2^bits) ----
     lflag: jax.Array        # local WC busy flags
     credit: jax.Array       # contention credits (§4.3)
@@ -128,7 +133,7 @@ def sim_init(p: SimParams, streams) -> SimState:
         wait_start=zN,
         next_ticket=zH, now_serving=zH, kver=zH, lockw=zH,
         comb_time=zH, comb_base=jnp.full((h,), -1, jnp.int32),
-        comb_upto=jnp.full((h,), -1, jnp.int32), epoch=zH,
+        comb_upto=jnp.full((h,), -1, jnp.int32), epoch=zH, del_q=zH,
         lflag=jnp.zeros((g << p.hl_bits,), jnp.int32),
         credit=jnp.zeros((g << p.hc_bits,), jnp.int32),
         rrec=jnp.zeros((g << p.hc_bits,), jnp.int32),
@@ -351,12 +356,20 @@ def tick(p: SimParams, mode: SyncMode, streams, state: SimState, t
     base = s.next_ticket[s.hkey]
     ticket = jnp.where(m, base + rank, s.ticket)
     next_ticket = s.next_ticket.at[jnp.where(m, s.hkey, H)].add(1, mode="drop")
+    del_q = s.del_q.at[jnp.where(m & is_delete, s.hkey, H)].add(1, mode="drop")
 
     def acquire(acq, ticket, next_ticket, comb_tail_in):
         """Dispatch lanes that just acquired the lock (head of queue)."""
         tail = next_ticket[s.hkey] - 1
         if mode == SyncMode.CIDER and not p.wc_off:
-            coord = acq & (tail > ticket) & ~is_delete
+            # Never combine while a DELETE holds an unreleased ticket on the
+            # key: a combined release completes every covered ticket WITHOUT
+            # its own pointer MCAS, so a covered DELETE would "complete"
+            # while the key stays live — a lost delete (surfaced by
+            # repro.analysis.race_check).  Conservative: a crashed ticketed
+            # DELETE keeps combining off for its key, which only costs
+            # throughput, never safety.
+            coord = acq & (tail > ticket) & ~is_delete & (del_q[s.hkey] == 0)
         else:
             coord = jnp.zeros((n,), bool)
         plain = acq & ~coord
@@ -421,6 +434,7 @@ def tick(p: SimParams, mode: SyncMode, streams, state: SimState, t
     # release (epoch FAA done)
     m = ev & (s.phase == MFAA)
     epoch = s.epoch.at[jnp.where(m, s.hkey, H)].add(1, mode="drop")
+    del_q = del_q.at[jnp.where(m & is_delete, s.hkey, H)].add(-1, mode="drop")
     comb_rel = m & (comb_pend > 0)
     batch = jnp.where(comb_rel, comb_tail - ticket + 1, 1)
     now_serving = now_serving.at[jnp.where(comb_rel, s.hkey, H)].set(
@@ -534,7 +548,7 @@ def tick(p: SimParams, mode: SyncMode, streams, state: SimState, t
         wait_start=wait_start,
         next_ticket=next_ticket, now_serving=now_serving, kver=kver,
         lockw=lockw, comb_time=comb_time, comb_base=comb_base,
-        comb_upto=comb_upto, epoch=epoch,
+        comb_upto=comb_upto, epoch=epoch, del_q=del_q,
         lflag=lflag, credit=credit, rrec=rrec,
         net=net2, verbs=verbs, done=done, done_w=done_w, retries=retries,
         comb_g=comb_g, comb_l=comb_l, pess_w=pess_w, exec_w=exec_w,

@@ -22,11 +22,23 @@ import numpy as np
 
 __all__ = [
     "OpKind", "Verb", "SyncMode", "IOMetrics", "LatencyStats", "EngineConfig",
-    "OpBatch", "NULL_PTR", "io_zeros", "io_add",
+    "OpBatch", "NULL_PTR", "UnsupportedOpError", "io_zeros", "io_add",
 ]
 
 # A null data pointer (empty slot). Pointers are int32 heap indices >= 0.
 NULL_PTR = jnp.int32(-1)
+
+
+class UnsupportedOpError(NotImplementedError):
+    """An op kind the target index structure cannot serve *by design* —
+    e.g. SCAN on a hash index, whose buckets scatter adjacent keys so a key
+    range has no contiguous slot run (DESIGN.md §9).
+
+    Every store raises this one type for capability rejections (enforced by
+    the bill lint, ``repro.analysis.bill_lint``) so callers can catch
+    "wrong index for this workload" distinctly from genuine bugs; it
+    subclasses ``NotImplementedError`` for backward compatibility.
+    """
 
 
 class OpKind(enum.IntEnum):

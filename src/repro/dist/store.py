@@ -33,9 +33,11 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core import engine
+from repro.core.credits import CreditState
 from repro.core.engine import Results, StoreState
 from repro.core.runner import WindowStream, _prev_alive
-from repro.core.types import NULL_PTR, EngineConfig, OpBatch, OpKind
+from repro.core.types import (NULL_PTR, EngineConfig, IOMetrics, OpBatch,
+                              OpKind)
 
 __all__ = ["shard_extents", "sharded_store_init", "sharded_populate",
            "sharded_store_view", "apply_batch_sharded", "run_windows_sharded",
@@ -253,7 +255,7 @@ def _sharded_stream_fn(cfg: EngineConfig, mesh, axis: str,
 def apply_batch_sharded(cfg: EngineConfig, mesh, state: StoreState,
                         credits, batch: OpBatch,
                         valid: jax.Array | None = None, *, axis: str = "data"
-                        ) -> tuple[StoreState, object, Results, object]:
+                        ) -> tuple[StoreState, CreditState, Results, IOMetrics]:
     """``engine.apply_batch`` under shard_map on ``mesh.shape[axis]`` shards.
 
     Drop-in equivalent of the single-device engine (same signature modulo
@@ -268,7 +270,7 @@ def run_windows_sharded(cfg: EngineConfig, mesh, state: StoreState,
                         credits, stream: WindowStream, *, axis: str = "data",
                         io_per_window: bool = False,
                         prev_alive: jax.Array | None = None
-                        ) -> tuple[StoreState, object, Results, object]:
+                        ) -> tuple[StoreState, CreditState, Results, IOMetrics]:
     """Sharded ``repro.core.runner.run_windows``: every window of ``stream``
     executes inside one ``lax.scan`` under one ``shard_map``.
 
@@ -290,7 +292,7 @@ def run_windows_sharded_traced(cfg: EngineConfig, mesh, state: StoreState,
                                credits, stream: WindowStream, *,
                                axis: str = "data",
                                prev_alive: jax.Array | None = None
-                               ) -> tuple[StoreState, object, Results, object,
+                               ) -> tuple[StoreState, CreditState, Results, IOMetrics,
                                           jax.Array]:
     """Sharded ``repro.core.runner.run_windows_traced``: returns
     ``(state, credits, results, io_per_window, credit_mass)`` with the

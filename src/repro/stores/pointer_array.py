@@ -13,7 +13,8 @@ import dataclasses
 
 from repro.core import engine, runner
 from repro.core.credits import CreditState, credit_init
-from repro.core.types import EngineConfig, IOMetrics, OpBatch, OpKind, SyncMode
+from repro.core.types import (EngineConfig, IOMetrics, OpBatch, OpKind,
+                              SyncMode, UnsupportedOpError)
 
 __all__ = ["PointerArray"]
 
@@ -22,7 +23,7 @@ def _reject_scan(kinds) -> None:
     """Point-op stores cannot serve range reads — fail loudly, not with a
     silent 0-row result (DESIGN.md §9)."""
     if bool((kinds == OpKind.SCAN).any()):
-        raise NotImplementedError(
+        raise UnsupportedOpError(
             "PointerArray is a point-op object store: it has no key order, "
             "so SCAN has no contiguous leaf run to traverse.  Range reads "
             "need the radix index (repro.stores.SmartART), whose leaf "

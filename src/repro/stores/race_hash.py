@@ -31,7 +31,7 @@ from repro.core import combine as wc
 from repro.core import engine
 from repro.core.credits import CreditState, credit_init
 from repro.core.types import (EngineConfig, IOMetrics, OpBatch, OpKind,
-                              SyncMode)
+                              SyncMode, UnsupportedOpError)
 
 __all__ = ["RaceHash"]
 
@@ -133,7 +133,7 @@ class RaceHash:
         """Resolve + execute one batch; returns (store', results, io, overflow)."""
         kinds = jnp.asarray(kinds, jnp.int32)
         if bool((kinds == OpKind.SCAN).any()):
-            raise NotImplementedError(
+            raise UnsupportedOpError(
                 "RaceHash cannot serve SCAN: the hash scatters adjacent keys "
                 "across unrelated buckets, so a key range has no contiguous "
                 "slot run to traverse.  Use the radix index "

@@ -76,7 +76,7 @@ def test_sharded_matches_single_device(mode):
         pop_keys, pop_vals)
     cr2 = credit_init(256)
 
-    for window in range(4):
+    for _window in range(4):
         kinds, keys, values = _random_ops(rng, B, N_SLOTS)
         # one FIXED hot key, STRIDED so the writers span all CNs (positions
         # map to CNs in blocks): same-CN duplicates are eaten by local WC

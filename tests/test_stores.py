@@ -46,7 +46,7 @@ def test_smart_art_vs_oracle(mode):
     rng = np.random.default_rng(1)
     store = SmartART.create(key_bits=12, mode=mode)
     oracle = OracleStore()
-    for step in range(4):
+    for _step in range(4):
         kinds, keys, values = _ops(rng, 256, 1 << 12)
         store, res, io = store.apply(kinds, keys, values, n_cns=8)
         ok_o, val_o = oracle.apply(kinds, keys, values)

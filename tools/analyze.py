@@ -1,0 +1,86 @@
+"""CLI driver for the repro.analysis invariant auditor (DESIGN.md §11).
+
+Runs the three static/model passes — ``jaxpr_check`` (jaxpr/HLO invariant
+audit), ``bill_lint`` (verb-bill conservation), ``race_check`` (exhaustive
+protocol model checking) — prints every violation, writes a machine-readable
+report, and exits non-zero if anything failed.  This is the ``make analyze``
+CI gate.
+
+Usage:
+    python tools/analyze.py [--pass jaxpr_check,bill_lint,race_check]
+                            [--report ANALYZE_REPORT.json] [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from pathlib import Path
+
+# The jaxpr pass audits the 4-way sharded collective contract, which needs
+# multiple devices — force an 8-way host platform BEFORE jax initializes
+# (mirrors tests/conftest.py; a no-op when XLA_FLAGS is already set).
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.analysis import ANALYSIS_VERSION, PASSES  # noqa: E402
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--pass", dest="passes", default=",".join(PASSES),
+                    help="comma-separated subset of passes to run "
+                         f"(default: {','.join(PASSES)})")
+    ap.add_argument("--report", default="ANALYZE_REPORT.json",
+                    help="machine-readable report path ('' to skip)")
+    ap.add_argument("--full", action="store_true",
+                    help="race_check: widen the 3-client scenario space "
+                         "beyond the CI-calibrated quick set")
+    args = ap.parse_args(argv)
+
+    selected = [p.strip() for p in args.passes.split(",") if p.strip()]
+    unknown = sorted(set(selected) - set(PASSES))
+    if unknown:
+        ap.error(f"unknown pass(es) {unknown}; choose from {list(PASSES)}")
+
+    report: dict = {"version": ANALYSIS_VERSION, "passes": {}}
+    total = 0
+    for name in selected:
+        mod = __import__(f"repro.analysis.{name}", fromlist=["run"])
+        notes: list[str] = []
+        t0 = time.time()
+        if name == "race_check":
+            viols = mod.run(notes, quick=not args.full)
+        else:
+            viols = mod.run(notes)
+        dt = time.time() - t0
+        total += len(viols)
+        report["passes"][name] = {
+            "violations": [{"target": v.target, "message": v.message}
+                           for v in viols],
+            "notes": notes,
+            "seconds": round(dt, 2),
+        }
+        status = "OK" if not viols else f"{len(viols)} VIOLATION(S)"
+        print(f"[analyze] {name}: {status} ({dt:.1f}s)")
+        for n in notes:
+            print(f"  note: {n}")
+        for v in viols:
+            print(f"  {v}")
+    report["ok"] = total == 0
+
+    if args.report:
+        Path(args.report).write_text(json.dumps(report, indent=2) + "\n")
+        print(f"[analyze] report -> {args.report}")
+    if total:
+        print(f"[analyze] FAILED: {total} violation(s)")
+        return 1
+    print("[analyze] all passes clean")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
