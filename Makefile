@@ -2,8 +2,8 @@ PYTHONPATH := src
 export PYTHONPATH
 
 .PHONY: test test-fast bench-smoke bench-kernels-smoke bench-ycsb-smoke \
-    bench-scenarios-smoke bench-recovery-smoke check-regression lint \
-    docs-check analyze typecheck
+    bench-scenarios-smoke bench-recovery-smoke bench-scale-smoke \
+    check-regression lint docs-check analyze typecheck
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -47,6 +47,13 @@ bench-scenarios-smoke:
 bench-recovery-smoke:
 	python -m benchmarks.recovery --fast
 
+# weak-scaling meshes {1,2,4} + open-loop arrival sweep -> BENCH_scale.fast.json,
+# including the dense-repack and sharded-vs-single bit-identity assertions
+# (committed full-size baseline: `python -m benchmarks.scale`, no --fast,
+#  which scales to the 16-way mesh and a 2M-key store)
+bench-scale-smoke:
+	python -m benchmarks.scale --fast
+
 # perf-regression gate over the fast JSONs (CI fails on >10% CIDER
 # modeled-mops drop, on CIDER losing the paper's mode ordering, on CIDER
 # losing its recovery-overhead lead, or on a same-backend wall-clock
@@ -54,7 +61,7 @@ bench-recovery-smoke:
 # including the kernel bit-identity smoke — so it never gates against
 # stale JSONs
 check-regression: bench-smoke bench-kernels-smoke bench-ycsb-smoke \
-    bench-scenarios-smoke bench-recovery-smoke
+    bench-scenarios-smoke bench-recovery-smoke bench-scale-smoke
 	python -m benchmarks.check_regression
 
 # docs gate: markdown link check over README/DESIGN/docs/ + every

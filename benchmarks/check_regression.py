@@ -21,8 +21,16 @@ fixed) would merge green.  Now CI fails when either
   below the committed ``_wall_engine`` floor.  Wall-clock is only
   comparable on the platform that produced the floor, so this check is
   SKIPPED (loudly) when the run's backend provenance — JAX backend,
-  resolved kernel implementation, interpret mode — differs from the
-  baseline's (docs/METRICS.md).
+  resolved kernel implementation, interpret mode, requested simulated
+  device count — differs from the baseline's (docs/METRICS.md), or
+* the scale benchmark regresses: CIDER's weak-scaling efficiency falls
+  below a committed per-mesh floor, CIDER stops leading steady-state
+  ``modeled_mops`` at any reported mesh, or CIDER loses the open-loop p99
+  tail lead at the top offered load (``check_scale``, docs/METRICS.md).
+
+``--summary`` additionally writes a markdown gate table (check x metric,
+floor vs actual, pass/fail) to ``$GITHUB_STEP_SUMMARY`` (stdout when unset)
+and emits a ``::error`` workflow annotation naming every failed floor.
 
 ``modeled_mops`` is derived from the exact metered verb bill of seeded
 streams, so it is bit-deterministic across machines — those baselines are
@@ -54,8 +62,8 @@ def _load(path: str, what: str) -> dict:
     if not os.path.exists(path):
         raise SystemExit(
             f"missing {what} {path!r} — run `make bench-smoke "
-            f"bench-ycsb-smoke bench-scenarios-smoke bench-recovery-smoke` "
-            f"first")
+            f"bench-ycsb-smoke bench-scenarios-smoke bench-recovery-smoke "
+            f"bench-scale-smoke` first")
     with open(path) as f:
         return json.load(f)
 
@@ -78,7 +86,11 @@ def _collect(engine: dict, scenarios: dict, recovery: dict,
     return out
 
 
-WALL_PROV_KEYS = ("jax_backend", "kernel_impl", "kernel_interpret")
+# requested_device_count distinguishes "different machine" from "different
+# simulated mesh" (the XLA host-device override the CI bench matrix sweeps) —
+# wall floors are incomparable across either, but the skip message names which
+WALL_PROV_KEYS = ("jax_backend", "kernel_impl", "kernel_interpret",
+                  "requested_device_count")
 
 
 def check_wall(engine: dict, baseline: dict, tolerance: float) -> list[str]:
@@ -95,11 +107,16 @@ def check_wall(engine: dict, baseline: dict, tolerance: float) -> list[str]:
                 "--update-baseline"]
     prov = engine.get("config", {}).get("provenance", {})
     base_prov = want.get("provenance", {})
-    if any(prov.get(k) != base_prov.get(k) for k in WALL_PROV_KEYS):
-        print("wall floors SKIPPED: backend provenance "
-              + str({k: prov.get(k) for k in WALL_PROV_KEYS})
+    mismatched = [k for k in WALL_PROV_KEYS
+                  if prov.get(k) != base_prov.get(k)]
+    if mismatched:
+        why = ("different simulated mesh"
+               if mismatched == ["requested_device_count"]
+               else "different machine/backend")
+        print(f"wall floors SKIPPED ({why}): provenance "
+              + str({k: prov.get(k) for k in mismatched})
               + " != baseline "
-              + str({k: base_prov.get(k) for k in WALL_PROV_KEYS}))
+              + str({k: base_prov.get(k) for k in mismatched}))
         return []
     failures = []
     for mode, floor in want["throughput_mops"].items():
@@ -125,6 +142,58 @@ def check_recovery(recovery: dict) -> list[str]:
                     failures.append(
                         f"recovery/{name}: CIDER lost its {metric} lead over "
                         f"{rival} ({cider} > {modes[rival][metric]})")
+    return failures
+
+
+def check_scale(scale: dict, baseline: dict, tolerance: float) -> list[str]:
+    """Weak-scaling + open-loop floors over ``BENCH_scale*.json``.
+
+    Three gates (docs/METRICS.md):
+
+    * CIDER's weak-scaling efficiency at every *baselined* mesh must stay
+      within ``tolerance`` of the committed floor — a gated mesh missing
+      from the JSON is a gate bypass and fails loudly;
+    * CIDER must lead every rival on steady-state ``modeled_mops`` at every
+      mesh the JSON reports (ties pass, falling strictly behind fails);
+    * CIDER must keep the open-loop tail lead: its p99 at the highest
+      offered load must not exceed any rival's (the hockey-stick curves
+      share one arrival draw and one window clock, so this is exact).
+    """
+    want = baseline.get("_scale")
+    if want is None:
+        return ["_scale: no committed weak-scaling floors — run "
+                "--update-baseline"]
+    failures = []
+    eff = scale.get("efficiency", {}).get("CIDER", {})
+    for mesh, floor in want["efficiency_CIDER"].items():
+        got = eff.get(mesh)
+        if got is None:
+            failures.append(
+                f"scale/efficiency/mesh{mesh}: gated mesh missing from the "
+                f"scale JSON — benchmark shrank or harness regressed")
+        elif got < floor * (1.0 - tolerance):
+            failures.append(
+                f"scale/efficiency/mesh{mesh}: CIDER weak-scaling efficiency "
+                f"collapsed {(1 - got / floor) * 100:.1f}% "
+                f"({got:.4f} < {floor:.4f} - {tolerance:.0%})")
+    for mesh, modes in scale.get("weak_scaling", {}).items():
+        cider = modes["CIDER"]["modeled_mops"]
+        for rival in BASELINES:
+            if cider < modes[rival]["modeled_mops"]:
+                failures.append(
+                    f"scale/mesh{mesh}: CIDER no longer leads {rival} on "
+                    f"modeled_mops ({cider:.4f} < "
+                    f"{modes[rival]['modeled_mops']:.4f})")
+    curves = scale.get("open_loop", {}).get("curves", {})
+    if curves.get("CIDER"):
+        cider_p99 = curves["CIDER"][-1]["p99_us"]
+        for rival in BASELINES:
+            rival_p99 = curves[rival][-1]["p99_us"]
+            if cider_p99 > rival_p99:
+                failures.append(
+                    f"scale/open_loop: CIDER lost its p99 tail lead over "
+                    f"{rival} at the top offered load "
+                    f"({cider_p99} > {rival_p99})")
     return failures
 
 
@@ -156,13 +225,113 @@ def check(actual: dict, baseline: dict, tolerance: float) -> list[str]:
     return failures
 
 
+def summary_rows(actual: dict, baseline: dict, engine: dict, scale: dict,
+                 recovery: dict, tolerance: float, wall_tolerance: float
+                 ) -> list[tuple]:
+    """(check, metric, floor, actual, status) per gate — the exit code comes
+    from the check_* functions; these rows re-state the same comparisons for
+    the markdown gate table."""
+
+    def num(x):
+        return round(x, 4) if isinstance(x, float) else x
+
+    rows = []
+    for name, modes in sorted(actual.items()):
+        got = modes["CIDER"]
+        floor = baseline.get(name, {}).get("CIDER")
+        ok = floor is not None and got >= floor * (1.0 - tolerance)
+        rows.append((name, "CIDER modeled_mops", num(floor), num(got),
+                     "PASS" if ok else "FAIL"))
+        best_rival = max(modes[r] for r in BASELINES)
+        rows.append((name, "CIDER lead", f">= {num(best_rival)}", num(got),
+                     "PASS" if got >= best_rival else "FAIL"))
+    want = baseline.get("_wall_engine")
+    if want:
+        prov = engine.get("config", {}).get("provenance", {})
+        base_prov = want.get("provenance", {})
+        skip = any(prov.get(k) != base_prov.get(k) for k in WALL_PROV_KEYS)
+        for mode, floor in want["throughput_mops"].items():
+            got = engine[mode]["throughput_mops"]
+            status = ("SKIP" if skip else
+                      "PASS" if got >= floor * (1.0 - wall_tolerance)
+                      else "FAIL")
+            rows.append((f"wall/engine/{mode}", "throughput_mops",
+                         num(floor), num(got), status))
+    for name, sc in sorted(recovery.get("scenarios", {}).items()):
+        modes = sc["modes"]
+        for metric in ("repair_cas", "p99_post_crash_us"):
+            floor = min(modes[r][metric] for r in ("MCS", "SPIN"))
+            got = modes["CIDER"][metric]
+            rows.append((f"recovery/{name}", f"CIDER {metric}",
+                         f"<= {num(floor)}", num(got),
+                         "PASS" if got <= floor else "FAIL"))
+    sc_want = baseline.get("_scale", {})
+    eff = scale.get("efficiency", {}).get("CIDER", {})
+    for mesh, floor in sorted(sc_want.get("efficiency_CIDER", {}).items(),
+                              key=lambda kv: int(kv[0])):
+        got = eff.get(mesh)
+        ok = got is not None and got >= floor * (1.0 - tolerance)
+        rows.append((f"scale/mesh{mesh}", "CIDER weak-scaling efficiency",
+                     num(floor), num(got) if got is not None else "MISSING",
+                     "PASS" if ok else "FAIL"))
+    for mesh, modes in sorted(scale.get("weak_scaling", {}).items(),
+                              key=lambda kv: int(kv[0])):
+        got = modes["CIDER"]["modeled_mops"]
+        best_rival = max(modes[r]["modeled_mops"] for r in BASELINES)
+        rows.append((f"scale/mesh{mesh}", "CIDER lead",
+                     f">= {num(best_rival)}", num(got),
+                     "PASS" if got >= best_rival else "FAIL"))
+    curves = scale.get("open_loop", {}).get("curves", {})
+    if curves.get("CIDER"):
+        got = curves["CIDER"][-1]["p99_us"]
+        floor = min(curves[r][-1]["p99_us"] for r in BASELINES)
+        rows.append(("scale/open_loop", "CIDER p99 @ top load",
+                     f"<= {num(floor)}", num(got),
+                     "PASS" if got <= floor else "FAIL"))
+    return rows
+
+
+def write_summary(rows: list[tuple], failures: list[str]):
+    """Markdown gate table -> $GITHUB_STEP_SUMMARY (stdout fallback), plus
+    one ``::error`` workflow annotation naming each failed floor."""
+    verdict = "FAIL" if failures else "PASS"
+    lines = [
+        "## Perf regression gate: " + verdict,
+        "",
+        f"{len(rows)} gated checks, {len(failures)} failure(s)",
+        "",
+        "| check | metric | floor | actual | status |",
+        "|---|---|---|---|---|",
+    ]
+    for name, metric, floor, got, status in rows:
+        mark = {"PASS": "✅", "FAIL": "❌", "SKIP": "⏭️"}.get(status, "")
+        lines.append(f"| {name} | {metric} | {floor} | {got} "
+                     f"| {mark} {status} |")
+    md = "\n".join(lines) + "\n"
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if path:
+        with open(path, "a") as f:
+            f.write(md)
+        print(f"gate table appended to GITHUB_STEP_SUMMARY "
+              f"({len(rows)} rows)")
+    else:
+        print(md)
+    for msg in failures:
+        print(f"::error title=perf regression gate::{msg}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--engine", default="BENCH_engine.fast.json")
     ap.add_argument("--scenarios", default="BENCH_scenarios.fast.json")
     ap.add_argument("--recovery", default="BENCH_recovery.fast.json")
     ap.add_argument("--ycsb", default="BENCH_ycsb.fast.json")
+    ap.add_argument("--scale", default="BENCH_scale.fast.json")
     ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--summary", action="store_true",
+                    help="write the markdown gate table to "
+                         "$GITHUB_STEP_SUMMARY (stdout when unset) and emit "
+                         "::error annotations naming each failed floor")
     ap.add_argument("--tolerance", type=float, default=0.10,
                     help="allowed fractional drop of CIDER modeled_mops")
     ap.add_argument("--wall-tolerance", type=float, default=0.50,
@@ -177,6 +346,7 @@ def main():
     scenarios = _load(args.scenarios, "scenario benchmark")
     recovery = _load(args.recovery, "recovery benchmark")
     ycsb = _load(args.ycsb, "ycsb suite benchmark")
+    scale = _load(args.scale, "scale benchmark")
     actual = _collect(engine, scenarios, recovery, ycsb)
 
     if args.update_baseline:
@@ -194,6 +364,10 @@ def main():
                 "throughput_mops": {
                     m: engine[m]["throughput_mops"] for m in MODES},
             },
+            "_scale": {
+                "gated_meshes": scale["config"]["gated_meshes"],
+                "efficiency_CIDER": scale["efficiency"]["CIDER"],
+            },
             **{name: {"CIDER": modes["CIDER"]}
                for name, modes in actual.items()},
         }
@@ -207,6 +381,11 @@ def main():
     failures = check(actual, baseline, args.tolerance)
     failures += check_recovery(recovery)
     failures += check_wall(engine, baseline, args.wall_tolerance)
+    failures += check_scale(scale, baseline, args.tolerance)
+    if args.summary:
+        write_summary(summary_rows(actual, baseline, engine, scale, recovery,
+                                   args.tolerance, args.wall_tolerance),
+                      failures)
     if failures:
         print(f"PERF REGRESSION GATE: {len(failures)} failure(s)")
         for msg in failures:

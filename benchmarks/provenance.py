@@ -11,10 +11,28 @@ metrics are bit-deterministic and need no such guard.
 """
 from __future__ import annotations
 
+import os
+import re
+
 import jax
 
 from repro.analysis import analysis_provenance
 from repro.core.combine import resolve_backend
+
+
+def requested_device_count() -> int | None:
+    """The ``--xla_force_host_platform_device_count`` override, if any.
+
+    ``device_count`` alone conflates two very different provenance changes:
+    a *different machine* (real accelerator count) and a *different simulated
+    mesh* (the XLA host-platform override the bench matrix sweeps).  Wall
+    floors must skip on either, but the skip message — and a human reading
+    the committed JSON — should be able to tell which one happened, so the
+    requested override is recorded alongside the live count.
+    """
+    m = re.search(r"xla_force_host_platform_device_count=(\d+)",
+                  os.environ.get("XLA_FLAGS", ""))
+    return int(m.group(1)) if m else None
 
 
 def provenance(kernel_backend: str = "auto") -> dict:
@@ -22,6 +40,7 @@ def provenance(kernel_backend: str = "auto") -> dict:
     return {
         "jax_backend": jax.default_backend(),
         "device_count": jax.device_count(),
+        "requested_device_count": requested_device_count(),
         "kernel_backend": kernel_backend,
         "kernel_impl": impl,
         "kernel_interpret": interpret,

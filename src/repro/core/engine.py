@@ -71,9 +71,23 @@ from repro.core.types import (NULL_PTR, EngineConfig, IOMetrics, OpBatch,
                               OpKind, SyncMode)
 
 __all__ = ["StoreState", "Results", "store_init", "store_view", "apply_batch",
-           "populate"]
+           "populate", "pack_meta"]
 
 _NONE = jnp.int32(-1)
+
+
+_VER_MASK = jnp.int32(0xF)      # the 4-bit version field of Fig 8
+_STRANDED_SHIFT = 4
+
+
+def pack_meta(ver: jax.Array, stranded: jax.Array) -> jax.Array:
+    """Pack the two small per-slot planes into one int32 word: the 4-bit
+    DELETE version (bits 0-3, §4.2.2) and the orphaned-lock node count
+    (bits 4-31, §4.6 — MCS chains bound it by the window size, far below
+    2^28).  One word instead of two halves the slot-metadata footprint,
+    which is what keeps the donated-buffer window scan resident at the
+    multi-million-key sizes ``benchmarks/scale.py`` runs (DESIGN.md §12)."""
+    return ver | (stranded << _STRANDED_SHIFT)
 
 
 @jax.tree_util.register_dataclass
@@ -81,13 +95,24 @@ _NONE = jnp.int32(-1)
 class StoreState:
     """The memory-pool resident state (all arrays shardable over slots)."""
     ptr: jax.Array       # (n_slots,) int32 heap index, NULL_PTR if empty
-    ver: jax.Array       # (n_slots,) int32 4-bit version (DELETE handling, §4.2.2)
+    meta: jax.Array      # (n_slots,) int32 packed per-slot metadata —
+                         # see ``pack_meta``: 4-bit DELETE version (§4.2.2)
+                         # + orphaned-lock node count (§4.6); read through
+                         # the ``ver``/``stranded`` properties
     epoch: jax.Array     # (n_slots,) int32 lock epoch (fault tolerance, §4.6)
     heap: jax.Array      # (heap_slots,) int32 out-of-place value payloads
     heap_top: jax.Array  # () int32 bump cursor
-    stranded: jax.Array  # (n_slots,) int32 orphaned lock nodes on this slot —
-                         # a CN died holding/queued on the lock and no live
-                         # waiter has broken it yet (crash recovery, §4.6)
+
+    @property
+    def ver(self) -> jax.Array:
+        """(n_slots,) 4-bit DELETE version, unpacked from ``meta``."""
+        return self.meta & _VER_MASK
+
+    @property
+    def stranded(self) -> jax.Array:
+        """(n_slots,) orphaned lock nodes on each slot — a CN died holding/
+        queued on the lock and no live waiter has broken it yet (§4.6)."""
+        return self.meta >> _STRANDED_SHIFT
 
 
 @jax.tree_util.register_dataclass
@@ -115,11 +140,10 @@ class Results:
 def store_init(cfg: EngineConfig) -> StoreState:
     return StoreState(
         ptr=jnp.full((cfg.n_slots,), NULL_PTR, jnp.int32),
-        ver=jnp.zeros((cfg.n_slots,), jnp.int32),
+        meta=jnp.zeros((cfg.n_slots,), jnp.int32),
         epoch=jnp.zeros((cfg.n_slots,), jnp.int32),
         heap=jnp.full((cfg.heap_slots,), _NONE, jnp.int32),
         heap_top=jnp.zeros((), jnp.int32),
-        stranded=jnp.zeros((cfg.n_slots,), jnp.int32),
     )
 
 
@@ -689,9 +713,9 @@ def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
     else:
         epoch = state.epoch
 
-    new_state = StoreState(ptr=ptr, ver=ver, epoch=epoch, heap=heap,
-                           heap_top=state.heap_top + n_commits,
-                           stranded=stranded)
+    new_state = StoreState(ptr=ptr, meta=pack_meta(ver, stranded),
+                           epoch=epoch, heap=heap,
+                           heap_top=state.heap_top + n_commits)
     # unsort results
     ok = jnp.zeros((b,), bool).at[perm].set(ok_s)
     # SCAN succeeds when it found any row; per-shard partial counts OR

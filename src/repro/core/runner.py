@@ -78,7 +78,8 @@ class WindowStream:
 def make_stream(kinds, keys, values, n_cns: int = 1,
                 lanes_per_cn: int | None = None,
                 valid: jax.Array | None = None,
-                alive: jax.Array | None = None) -> WindowStream:
+                alive: jax.Array | None = None,
+                cn: jax.Array | None = None) -> WindowStream:
     """Stack ``(W, B)`` op arrays into a ``WindowStream``.
 
     Window ``w`` of the result is exactly ``OpBatch.make(kinds[w], keys[w],
@@ -86,6 +87,11 @@ def make_stream(kinds, keys, values, n_cns: int = 1,
     assignment — so the fused scan sees the batches the per-window loop saw.
     ``alive`` (``(W, n_cns)`` bool, default all alive) attaches a liveness
     schedule; build one with ``repro.recovery.liveness``.
+
+    ``cn`` (``(W, B)`` int32) overrides the default round-robin lane→CN map.
+    Open-loop streams need it: a dense re-pack moves an op to a new lane, and
+    only an explicit CN plane keeps its (key, cn) write-combining group — and
+    hence its bill — identical to the padded original (DESIGN.md §12).
     """
     kinds = jnp.asarray(kinds, jnp.int32)
     keys = jnp.asarray(keys, jnp.int32)
@@ -94,7 +100,12 @@ def make_stream(kinds, keys, values, n_cns: int = 1,
     pos = jnp.broadcast_to(jnp.arange(b, dtype=jnp.int32), (w, b))
     if lanes_per_cn is None:
         lanes_per_cn = max(b // max(n_cns, 1), 1)
-    cn = (pos // lanes_per_cn) % max(n_cns, 1)
+    if cn is None:
+        cn = (pos // lanes_per_cn) % max(n_cns, 1)
+    else:
+        cn = jnp.asarray(cn, jnp.int32)
+        if cn.shape != (w, b):
+            raise ValueError(f"cn plane is {cn.shape}, expected {(w, b)}")
     if valid is None:
         valid = kinds != OpKind.NOP
     if alive is None:

@@ -141,9 +141,8 @@ def failover_reown(cfg: EngineConfig, n_from: int, state: StoreState,
     keys = np.flatnonzero(exists)
     new = sharded_populate(cfg, n_to, sharded_store_init(cfg, n_to),
                            keys, val[keys])
-    new = dataclasses.replace(new, ver=host_rehome(state.ver),
-                              epoch=host_rehome(state.epoch),
-                              stranded=host_rehome(state.stranded))
+    new = dataclasses.replace(new, meta=host_rehome(state.meta),
+                              epoch=host_rehome(state.epoch))
     lost_live = int(exists.reshape(n_from, per_f)[dead].sum()) if dead else 0
     recovery_io = {
         "dead_shards": dead,
@@ -179,8 +178,8 @@ def _psum_results(res: Results, axis: str) -> Results:
 
 
 def _store_spec(axis: str) -> StoreState:
-    return StoreState(ptr=P(axis), ver=P(axis), epoch=P(axis),
-                      heap=P(axis), heap_top=P(axis), stranded=P(axis))
+    return StoreState(ptr=P(axis), meta=P(axis), epoch=P(axis),
+                      heap=P(axis), heap_top=P(axis))
 
 
 @functools.lru_cache(maxsize=None)
@@ -210,7 +209,8 @@ def _sharded_fn(cfg: EngineConfig, mesh, axis: str):
 
 @functools.lru_cache(maxsize=None)
 def _sharded_stream_fn(cfg: EngineConfig, mesh, axis: str,
-                       io_per_window: bool, traced: bool = False):
+                       io_per_window: bool, traced: bool = False,
+                       per_shard_io: bool = False):
     n_shards = int(mesh.shape[axis])
     per, hper = shard_extents(cfg, n_shards)
     lcfg = dataclasses.replace(cfg, n_slots=per, heap_slots=hper)
@@ -238,8 +238,23 @@ def _sharded_stream_fn(cfg: EngineConfig, mesh, axis: str,
         st = dataclasses.replace(st, heap_top=st.heap_top[None])
         if not io_per_window:
             ios = jax.tree.map(lambda x: jnp.sum(x, axis=0), ios)
-        res_io = (st, cr, _psum_results(ress, axis),
-                  jax.tree.map(lambda x: jax.lax.psum(x, axis), ios))
+        if per_shard_io:
+            # keep every field at exactly ONE psum (the collective census in
+            # repro.analysis.jaxpr_check forbids all_gather): each shard
+            # scatters its local bill into its own onehot slot, the psum
+            # assembles the (..., n_shards) plane, and summing that plane
+            # recovers the replicated global bill bit-exactly (asserted by
+            # tests/test_dist_store.py) — the weak-scaling benchmark needs
+            # the per-shard split because mesh throughput is bound by the
+            # HOTTEST shard's NIC, not the sum.
+            onehot = (jnp.arange(n_shards, dtype=jnp.int32)
+                      == jax.lax.axis_index(axis)).astype(jnp.int32)
+            ios = jax.tree.map(
+                lambda x: jax.lax.psum(x[..., None] * onehot.astype(x.dtype),
+                                       axis), ios)
+        else:
+            ios = jax.tree.map(lambda x: jax.lax.psum(x, axis), ios)
+        res_io = (st, cr, _psum_results(ress, axis), ios)
         # credit mass is computed from the replicated credit table, so every
         # shard already holds the identical (W,) trajectory
         return res_io + (outs[2],) if traced else res_io
@@ -269,6 +284,7 @@ def apply_batch_sharded(cfg: EngineConfig, mesh, state: StoreState,
 def run_windows_sharded(cfg: EngineConfig, mesh, state: StoreState,
                         credits, stream: WindowStream, *, axis: str = "data",
                         io_per_window: bool = False,
+                        per_shard_io: bool = False,
                         prev_alive: jax.Array | None = None
                         ) -> tuple[StoreState, CreditState, Results, IOMetrics]:
     """Sharded ``repro.core.runner.run_windows``: every window of ``stream``
@@ -283,8 +299,15 @@ def run_windows_sharded(cfg: EngineConfig, mesh, state: StoreState,
     ``credits`` are donated.  ``prev_alive`` overrides the liveness row
     assumed before window 0 (see ``runner._prev_alive``) so a run split
     around a shard failover still strands crashes at the boundary.
+
+    ``per_shard_io=True`` appends a trailing ``(n_shards,)`` axis to every
+    ``IOMetrics`` field — shard ``s``'s slice is the bill its own partition
+    served, and the sum over shards equals the replicated global bill.  The
+    weak-scaling benchmark divides by the hottest shard's service time, since
+    parallel MN NICs serve their partitions concurrently.
     """
-    return _sharded_stream_fn(cfg, mesh, axis, io_per_window)(
+    return _sharded_stream_fn(cfg, mesh, axis, io_per_window,
+                              per_shard_io=per_shard_io)(
         state, credits, stream, _prev_alive(stream, prev_alive))
 
 

@@ -124,10 +124,11 @@ def modeled_throughput(res, io: IOMetrics):
 
 
 def test_jaxpr_contract_constants_match_types():
-    # 6 StoreState + 2 CreditState donated leaves; 9 Results + 11 IOMetrics
-    # psums — derived from the live dataclasses, so a new field moves both
-    # the contract and the audit together
-    assert jaxpr_check.expected_donation_pairs() == 8
+    # 5 StoreState + 2 CreditState donated leaves (ver+stranded packed into
+    # one meta word); 9 Results + 11 IOMetrics psums — derived from the live
+    # dataclasses, so a new field moves both the contract and the audit
+    # together
+    assert jaxpr_check.expected_donation_pairs() == 7
     assert jaxpr_check.expected_psums() == 20
 
 

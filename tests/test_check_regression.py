@@ -1,9 +1,11 @@
 """Unit tests for the CI perf gate's pure check logic — synthetic dicts, no
-benchmark runs: the modeled-mops floor/ordering checks and the new
-wall-clock floors (gated on backend provenance, DESIGN.md §10)."""
+benchmark runs: the modeled-mops floor/ordering checks, the wall-clock
+floors (gated on backend provenance, DESIGN.md §10), the weak-scaling /
+open-loop floors (``check_scale``), and the markdown gate summary."""
 from __future__ import annotations
 
-from benchmarks.check_regression import check, check_wall
+from benchmarks.check_regression import (check, check_scale, check_wall,
+                                         summary_rows, write_summary)
 
 PROV = {"jax_backend": "cpu", "kernel_impl": "jnp", "kernel_interpret": False}
 
@@ -55,6 +57,121 @@ def test_wall_skipped_on_backend_mismatch(capsys):
 def test_wall_missing_baseline_fails():
     fails = check_wall(_engine(FLOORS), {}, 0.5)
     assert len(fails) == 1 and "_wall_engine" in fails[0]
+
+
+def _scale_json(eff_cider=0.8, mops=None, p99=None):
+    """Minimal BENCH_scale-shaped dict.  Defaults: CIDER leads everywhere."""
+    mops = mops or {"OSYNC": 1.0, "SPIN": 0.8, "MCS": 1.2, "CIDER": 2.0}
+    p99 = p99 or {"OSYNC": 140.0, "SPIN": 170.0, "MCS": 200.0, "CIDER": 105.0}
+    return {
+        "config": {"gated_meshes": [1, 4]},
+        "efficiency": {"CIDER": {"1": 1.0, "4": eff_cider}},
+        "weak_scaling": {
+            "1": {m: {"modeled_mops": v} for m, v in mops.items()},
+            "4": {m: {"modeled_mops": v * 3} for m, v in mops.items()},
+        },
+        "open_loop": {"curves": {
+            m: [{"rho": 0.7, "p99_us": v / 2}, {"rho": 1.05, "p99_us": v}]
+            for m, v in p99.items()}},
+    }
+
+
+def _scale_baseline(floors=None):
+    return {"_scale": {"gated_meshes": [1, 4],
+                       "efficiency_CIDER": floors or {"1": 1.0, "4": 0.8}}}
+
+
+def test_scale_passes_at_floor():
+    assert check_scale(_scale_json(), _scale_baseline(), 0.10) == []
+
+
+def test_scale_fails_on_injected_efficiency_collapse():
+    """The acceptance check: an injected weak-scaling efficiency collapse
+    (hot-shard serialization regression) must fail the gate."""
+    fails = check_scale(_scale_json(eff_cider=0.3), _scale_baseline(), 0.10)
+    assert len(fails) == 1 and "efficiency" in fails[0] and "mesh4" in fails[0]
+    # just inside the tolerance band passes
+    assert check_scale(_scale_json(eff_cider=0.73), _scale_baseline(),
+                       0.10) == []
+
+
+def test_scale_missing_gated_mesh_fails():
+    """Dropping a baselined mesh from the JSON is a gate bypass, not a pass."""
+    shrunk = _scale_json()
+    del shrunk["efficiency"]["CIDER"]["4"]
+    fails = check_scale(shrunk, _scale_baseline(), 0.10)
+    assert len(fails) == 1 and "missing" in fails[0]
+
+
+def test_scale_fails_on_lost_mops_lead():
+    slow = _scale_json(mops={"OSYNC": 1.0, "SPIN": 0.8, "MCS": 2.5,
+                             "CIDER": 2.0})
+    fails = check_scale(slow, _scale_baseline(), 0.10)
+    assert len(fails) == 2          # both meshes report MCS ahead
+    assert all("no longer leads MCS" in f for f in fails)
+    # ties pass (read-heavy cells bill identically under every mode)
+    tie = _scale_json(mops={"OSYNC": 2.0, "SPIN": 0.8, "MCS": 1.2,
+                            "CIDER": 2.0})
+    assert check_scale(tie, _scale_baseline(), 0.10) == []
+
+
+def test_scale_fails_on_lost_open_loop_tail_lead():
+    """Only the TOP offered load is gated — losing p99 at rho 1.05 fails,
+    a mid-curve wobble does not."""
+    slow = _scale_json(p99={"OSYNC": 100.0, "SPIN": 170.0, "MCS": 200.0,
+                            "CIDER": 105.0})
+    fails = check_scale(slow, _scale_baseline(), 0.10)
+    assert len(fails) == 1 and "p99 tail lead" in fails[0]
+    wobble = _scale_json()
+    wobble["open_loop"]["curves"]["CIDER"][0]["p99_us"] = 999.0
+    assert check_scale(wobble, _scale_baseline(), 0.10) == []
+
+
+def test_scale_missing_baseline_block_fails():
+    fails = check_scale(_scale_json(), {}, 0.10)
+    assert len(fails) == 1 and "_scale" in fails[0]
+
+
+def test_summary_rows_and_markdown_table(tmp_path, monkeypatch):
+    """summary_rows restates every gate as a (check, metric, floor, actual,
+    status) row and write_summary renders them to $GITHUB_STEP_SUMMARY with
+    ::error annotations for the failures."""
+    actual = {"engine": {"OSYNC": 1.0, "SPIN": 1.0, "MCS": 1.0, "CIDER": 2.0}}
+    baseline = {"engine": {"CIDER": 2.0}, **_wall_baseline(FLOORS),
+                **_scale_baseline()}
+    recovery = {"scenarios": {"crash": {"modes": {
+        "CIDER": {"repair_cas": 1, "p99_post_crash_us": 50.0},
+        "MCS": {"repair_cas": 9, "p99_post_crash_us": 90.0},
+        "SPIN": {"repair_cas": 7, "p99_post_crash_us": 80.0}}}}}
+    # wall provenance mismatch -> those rows must read SKIP, not PASS/FAIL
+    tpu_engine = _engine(FLOORS, prov={**PROV, "jax_backend": "tpu"})
+    rows = summary_rows(actual, baseline, tpu_engine, _scale_json(),
+                        recovery, 0.10, 0.50)
+    by = {(r[0], r[1]): r[4] for r in rows}
+    assert by[("engine", "CIDER modeled_mops")] == "PASS"
+    assert by[("engine", "CIDER lead")] == "PASS"
+    assert by[("wall/engine/CIDER", "throughput_mops")] == "SKIP"
+    assert by[("recovery/crash", "CIDER repair_cas")] == "PASS"
+    assert by[("scale/mesh4", "CIDER weak-scaling efficiency")] == "PASS"
+    assert by[("scale/open_loop", "CIDER p99 @ top load")] == "PASS"
+
+    out = tmp_path / "summary.md"
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(out))
+    write_summary(rows, ["engine: CIDER modeled_mops regressed 25.0%"])
+    md = out.read_text()
+    assert "## Perf regression gate: FAIL" in md
+    assert "| check | metric | floor | actual | status |" in md
+    assert md.count("|") >= 6 * (len(rows) + 2)
+    assert "⏭️ SKIP" in md
+
+
+def test_write_summary_error_annotations(capsys, monkeypatch):
+    monkeypatch.delenv("GITHUB_STEP_SUMMARY", raising=False)
+    write_summary([("engine", "CIDER modeled_mops", 2.0, 1.5, "FAIL")],
+                  ["engine: regressed"])
+    out = capsys.readouterr().out
+    assert "::error title=perf regression gate::engine: regressed" in out
+    assert "## Perf regression gate: FAIL" in out
 
 
 def test_modeled_check_still_gates():

@@ -1,0 +1,287 @@
+"""Open-loop arrival streams (DESIGN.md §12): the Poisson arrival-count law
+(chi-square, mirroring the zipf tests), MMPP burst-phase composition, the
+padding-plane invariants (invalid lanes never bill), and the dense-repack
+bit-equality contract on the single-device and 8-way sharded paths."""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+import jax
+
+from repro.core import runner
+from repro.core.credits import credit_init
+from repro.core.engine import populate, store_init
+from repro.core.types import EngineConfig, OpKind, SyncMode
+from repro.dist import store as dstore
+from repro.launch.mesh import make_local_mesh
+from repro.workloads.openloop import (OpenLoopSpec, dense_repack,
+                                      generate_openloop_stream,
+                                      open_loop_latency)
+
+N_CNS, LANES = 4, 16
+B = N_CNS * LANES
+
+
+def _spec(**kw):
+    base = dict(n_cns=N_CNS, lanes_per_cn=LANES, windows=12, rho=0.8,
+                n_keys=512, seed=3)
+    base.update(kw)
+    return OpenLoopSpec(**base)
+
+
+def _poisson_pmf(lam, kmax):
+    k = np.arange(kmax, dtype=np.float64)
+    logp = k * math.log(lam) - lam - [math.lgamma(x + 1) for x in k]
+    return np.exp(logp)
+
+
+# ------------------------------------------------------------- arrival law
+
+
+def test_poisson_arrival_count_law_chi_square():
+    """Per-(window, CN) arrival counts fit Poisson(rho * lanes_per_cn):
+    mean == variance, and chi-square over the binned count distribution
+    stays below the 99.9% critical value (same pattern as the zipf tests)."""
+    ol = generate_openloop_stream(_spec(windows=4000, rho=0.8, seed=0))
+    lam = 0.8 * LANES
+    draws = ol.arrivals.ravel().astype(np.int64)
+    assert abs(draws.mean() - lam) < 0.15
+    assert abs(draws.var() / draws.mean() - 1.0) < 0.05   # dispersion == 1
+    kmax = int(draws.max()) + 1
+    pmf = _poisson_pmf(lam, kmax)
+    # lump the far tail so every expected bin count stays >~5
+    counts = np.bincount(draws, minlength=kmax).astype(np.float64)
+    keep = pmf * draws.size >= 5
+    counts = np.concatenate([counts[keep], [counts[~keep].sum()]])
+    pmf = np.concatenate([pmf[keep], [pmf[~keep].sum()]])
+    chi2 = float(((counts - pmf * draws.size) ** 2
+                  / np.maximum(pmf * draws.size, 1e-12)).sum())
+    # dof ~ len(counts)-1 (~35); 99.9% critical value of chi2(40) is ~73
+    assert chi2 < 90, f"chi2={chi2:.1f} over {len(counts)} bins"
+
+
+def test_mmpp_burst_phase_composition():
+    """The 2-state MMPP: both phases occur, the burst phase's stationary
+    share matches p_enter/(p_enter+p_exit), burst windows carry ~burst_mult
+    more arrivals than quiet ones, and the normalization keeps the OVERALL
+    mean at rho*lanes_per_cn — rho stays comparable across processes."""
+    sp = _spec(windows=6000, rho=0.7, arrival="mmpp", burst_mult=4.0,
+               p_enter_burst=0.1, p_exit_burst=0.3, seed=1)
+    ol = generate_openloop_stream(sp)
+    ph = ol.phases.astype(bool)
+    assert ph.any() and (~ph).any()
+    pi_b = 0.1 / 0.4
+    assert abs(ph.mean() - pi_b) < 0.03
+    quiet = ol.arrivals[~ph].mean()
+    burst = ol.arrivals[ph].mean()
+    assert abs(burst / quiet - 4.0) < 0.25
+    assert abs(ol.arrivals.mean() - 0.7 * LANES) < 0.2
+
+
+def test_mmpp_overdispersed_vs_poisson():
+    """Bursty arrivals are the point: MMPP's count variance exceeds its mean
+    (index of dispersion > 1), unlike the Poisson stream's."""
+    ol = generate_openloop_stream(_spec(windows=4000, arrival="mmpp", seed=2))
+    d = ol.arrivals.ravel()
+    assert d.var() / d.mean() > 1.5
+
+
+def test_spec_validation():
+    import pytest
+    with pytest.raises(ValueError):
+        _spec(arrival="bursty")
+    with pytest.raises(ValueError):
+        _spec(rho=0.0)
+
+
+# ------------------------------------------------- queueing / padding plane
+
+
+def test_fifo_conservation_and_delay():
+    """Offered arrivals are either delivered into lanes or left as backlog;
+    at rho > 1 the backlog grows and per-op queueing delay appears."""
+    ol = generate_openloop_stream(_spec(rho=0.7, windows=40, seed=5))
+    assert ol.offered == ol.delivered + int(ol.backlog_end.sum())
+    hot = generate_openloop_stream(_spec(rho=1.3, windows=40, seed=5))
+    assert hot.offered == hot.delivered + int(hot.backlog_end.sum())
+    assert hot.backlog_end.sum() > 0
+    assert hot.delay_windows.max() > ol.delay_windows.max()
+    # overloaded CNs issue full windows once the backlog builds
+    assert hot.valid[-1].all()
+
+
+def test_padding_plane_shape_and_layout():
+    """Invalid lanes are NOP with zeroed planes; each CN's issued ops pack
+    the front of its own lane block; the CN plane is the block map."""
+    ol = generate_openloop_stream(_spec(seed=7))
+    assert ol.kinds.shape == (12, B)
+    assert ((ol.kinds == OpKind.NOP) == ~ol.valid).all()
+    assert (ol.delay_windows[~ol.valid] == 0).all()
+    assert (ol.keys[~ol.valid] == 0).all()
+    cn = np.repeat(np.arange(N_CNS), LANES)
+    assert (ol.cn == cn[None, :]).all()
+    for c in range(N_CNS):
+        block = ol.valid[:, c * LANES:(c + 1) * LANES]
+        # valid lanes are a prefix of the block in every window
+        assert (np.sort(block, axis=1)[:, ::-1] == block).all()
+
+
+def _run(cfg, ol, n_cns=N_CNS, lanes=LANES):
+    st = populate(cfg, store_init(cfg), np.arange(cfg.n_slots),
+                  np.arange(cfg.n_slots))
+    stream = runner.make_stream(ol.kinds, ol.keys % cfg.n_slots, ol.values,
+                                n_cns=n_cns, lanes_per_cn=lanes,
+                                valid=ol.valid, cn=ol.cn)
+    return runner.run_windows(cfg, st, credit_init(cfg.n_slots), stream)
+
+
+def test_invalid_lanes_never_bill():
+    """The bill must be a function of the VALID lanes only: scrambling the
+    padding lanes' keys/values/kinds changes nothing — not the bill, not
+    the store, not the valid lanes' results."""
+    ol = generate_openloop_stream(_spec(seed=9))
+    cfg = EngineConfig(n_slots=1024, heap_slots=4096, mode=SyncMode.CIDER)
+    st1, cr1, res1, io1 = _run(cfg, ol)
+
+    rng = np.random.default_rng(0)
+    garbled = generate_openloop_stream(_spec(seed=9))
+    inv = ~garbled.valid
+    garbled.keys[inv] = rng.integers(0, 1024, inv.sum())
+    garbled.values[inv] = rng.integers(1, 2**30, inv.sum())
+    st2, cr2, res2, io2 = _run(cfg, garbled)
+
+    for f in io1.__dataclass_fields__:
+        np.testing.assert_array_equal(np.asarray(getattr(io1, f)),
+                                      np.asarray(getattr(io2, f)), f)
+    for f in st1.__dataclass_fields__:
+        np.testing.assert_array_equal(np.asarray(getattr(st1, f)),
+                                      np.asarray(getattr(st2, f)), f)
+    ok = np.asarray(res1.ok)
+    np.testing.assert_array_equal(ok[ol.valid], np.asarray(res2.ok)[ol.valid])
+
+
+# --------------------------------------------------- dense-repack contract
+
+
+def _assert_same_run(ol, rp, run_a, run_b):
+    st1, cr1, res1, io1 = run_a
+    st2, cr2, res2, io2 = run_b
+    for f in io1.__dataclass_fields__:
+        np.testing.assert_array_equal(np.asarray(getattr(io1, f)),
+                                      np.asarray(getattr(io2, f)), f)
+    np.testing.assert_array_equal(np.asarray(cr1.credit),
+                                  np.asarray(cr2.credit))
+    # per-op results land at permuted lanes: repacked lane b holds what
+    # original lane order[w, b] held
+    for f in res1.__dataclass_fields__:
+        a, b = np.asarray(getattr(res1, f)), np.asarray(getattr(res2, f))
+        if a.ndim >= 2 and a.shape[:2] == ol.valid.shape:
+            moved = np.take_along_axis(a, rp.order, axis=1)
+            np.testing.assert_array_equal(moved[rp.valid], b[rp.valid], f)
+
+
+def test_dense_repack_bit_equality_single_device():
+    """DESIGN.md §12: packing valid lanes to the front (stable, CN plane
+    carried) is invisible — bill, store, credits, and per-op results are
+    bit-identical modulo the recorded lane permutation.  All four modes."""
+    ol = generate_openloop_stream(_spec(seed=11))
+    rp = dense_repack(ol)
+    assert (np.sort(rp.valid, axis=1)[:, ::-1] == rp.valid).all()
+    assert rp.delivered == ol.delivered
+    for mode in SyncMode:
+        cfg = EngineConfig(n_slots=1024, heap_slots=4096, mode=mode)
+        a, b = _run(cfg, ol), _run(cfg, rp)
+        _assert_same_run(ol, rp, a, b)
+        for f in a[0].__dataclass_fields__:
+            np.testing.assert_array_equal(np.asarray(getattr(a[0], f)),
+                                          np.asarray(getattr(b[0], f)), f)
+
+
+def test_dense_repack_bit_equality_sharded_8way():
+    """The same contract through the 8-way shard_map runner: partially
+    filled windows and their dense re-pack produce the identical global
+    bill and logical store view."""
+    ol = generate_openloop_stream(_spec(seed=13))
+    rp = dense_repack(ol)
+    cfg = EngineConfig(n_slots=1024, heap_slots=4096, mode=SyncMode.CIDER)
+    mesh = make_local_mesh(data=8)
+    pk = np.arange(cfg.n_slots)
+
+    def run(s):
+        st = dstore.sharded_populate(
+            cfg, 8, dstore.sharded_store_init(cfg, 8), pk, pk)
+        stream = runner.make_stream(s.kinds, s.keys % cfg.n_slots, s.values,
+                                    n_cns=N_CNS, lanes_per_cn=LANES,
+                                    valid=s.valid, cn=s.cn)
+        return dstore.run_windows_sharded(cfg, mesh, st,
+                                          credit_init(cfg.n_slots), stream)
+
+    st1, _, _, io1 = run(ol)
+    st2, _, _, io2 = run(rp)
+    for f in io1.__dataclass_fields__:
+        np.testing.assert_array_equal(np.asarray(getattr(io1, f)),
+                                      np.asarray(getattr(io2, f)), f)
+    for a, b in zip(dstore.sharded_store_view(cfg, 8, st1),
+                    dstore.sharded_store_view(cfg, 8, st2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_per_shard_io_sums_to_replicated_bill():
+    """per_shard_io appends an (n_shards,) axis whose sum recovers the
+    replicated global bill bit-exactly — the weak-scaling benchmark's
+    hottest-shard metric rests on this."""
+    ol = generate_openloop_stream(_spec(seed=15))
+    cfg = EngineConfig(n_slots=1024, heap_slots=4096, mode=SyncMode.CIDER)
+    mesh = make_local_mesh(data=8)
+    pk = np.arange(cfg.n_slots)
+
+    def run(per_shard):
+        st = dstore.sharded_populate(
+            cfg, 8, dstore.sharded_store_init(cfg, 8), pk, pk)
+        stream = runner.make_stream(ol.kinds, ol.keys % cfg.n_slots,
+                                    ol.values, n_cns=N_CNS,
+                                    lanes_per_cn=LANES, valid=ol.valid,
+                                    cn=ol.cn)
+        return dstore.run_windows_sharded(cfg, mesh, st,
+                                          credit_init(cfg.n_slots), stream,
+                                          per_shard_io=per_shard)
+
+    _, _, _, io_s = run(True)
+    _, _, _, io_g = run(False)
+    for f in io_s.__dataclass_fields__:
+        a = np.asarray(getattr(io_s, f))
+        assert a.shape[-1] == 8, f
+        np.testing.assert_array_equal(a.sum(-1),
+                                      np.asarray(getattr(io_g, f)), f)
+
+
+# ------------------------------------------------------- latency semantics
+
+
+def test_open_loop_latency_adds_queue_delay():
+    """Total latency = delay_windows * window_us + in-window modeled
+    latency; invalid lanes come back NaN."""
+    from repro.core.simnet import SimParams
+    ol = generate_openloop_stream(_spec(rho=1.2, windows=20, seed=17))
+    cfg = EngineConfig(n_slots=1024, heap_slots=8192, mode=SyncMode.CIDER)
+    _, _, res, _ = _run(cfg, ol)
+    lat = runner.modeled_latency(cfg, ol.kinds, res, SimParams(),
+                                 valid=ol.valid)
+    total = open_loop_latency(ol, lat, window_us=100.0)
+    assert np.isnan(total[~ol.valid]).all()
+    lat2 = np.asarray(lat).reshape(ol.valid.shape)
+    delayed = ol.valid & (ol.delay_windows > 0)
+    assert delayed.any()
+    np.testing.assert_allclose(
+        total[delayed] - lat2[delayed],
+        ol.delay_windows[delayed].astype(np.float64) * 100.0)
+
+
+def test_make_stream_rejects_bad_cn_plane():
+    import pytest
+    ol = generate_openloop_stream(_spec(seed=19))
+    with pytest.raises(ValueError, match="cn plane"):
+        runner.make_stream(ol.kinds, ol.keys, ol.values, n_cns=N_CNS,
+                           valid=ol.valid, cn=ol.cn[:, :8])
