@@ -1,13 +1,29 @@
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test test-fast bench-smoke bench-kernels-smoke bench-ycsb-smoke \
-    bench-scenarios-smoke bench-recovery-smoke bench-scale-smoke \
+.PHONY: test test-fast coverage bench-smoke bench-kernels-smoke \
+    bench-ycsb-smoke bench-scenarios-smoke bench-recovery-smoke \
+    bench-scale-smoke bench-replication-smoke \
     check-regression lint docs-check analyze typecheck
 
 # tier-1 verify (ROADMAP.md)
 test:
 	python -m pytest -x -q
+
+# tier-1 suite under line coverage of src/repro with the committed floor
+# (COV_FLOOR, also recorded in README's gate list); writes the htmlcov/
+# report CI uploads as an artifact.  Falls back to the plain suite on
+# machines without pytest-cov so `make coverage` never blocks local work.
+COV_FLOOR := 70
+coverage:
+	@if python -c "import pytest_cov" 2>/dev/null; then \
+	    python -m pytest -x -q --cov=src/repro --cov-branch \
+	        --cov-report=term-missing:skip-covered --cov-report=html \
+	        --cov-fail-under=$(COV_FLOOR); \
+	else \
+	    echo "pytest-cov not installed; running the plain suite"; \
+	    python -m pytest -x -q; \
+	fi
 
 # quick signal: engine + runner + dist + stores + workloads + the Pallas
 # wc_combine kernel that mirrors the engine's combine contract
@@ -47,6 +63,13 @@ bench-scenarios-smoke:
 bench-recovery-smoke:
 	python -m benchmarks.recovery --fast
 
+# replication matrix R in {1,2,3} x SyncMode x {single, sharded4} + the
+# MN-crash failover cell -> BENCH_replication.fast.json, including the
+# sharded-bill, xR-conservation, and failover bit-equality assertions
+# (committed full-size baseline: `python -m benchmarks.replication`, no --fast)
+bench-replication-smoke:
+	python -m benchmarks.replication --fast
+
 # weak-scaling meshes {1,2,4} + open-loop arrival sweep -> BENCH_scale.fast.json,
 # including the dense-repack and sharded-vs-single bit-identity assertions
 # (committed full-size baseline: `python -m benchmarks.scale`, no --fast,
@@ -61,7 +84,8 @@ bench-scale-smoke:
 # including the kernel bit-identity smoke — so it never gates against
 # stale JSONs
 check-regression: bench-smoke bench-kernels-smoke bench-ycsb-smoke \
-    bench-scenarios-smoke bench-recovery-smoke bench-scale-smoke
+    bench-scenarios-smoke bench-recovery-smoke bench-scale-smoke \
+    bench-replication-smoke
 	python -m benchmarks.check_regression
 
 # docs gate: markdown link check over README/DESIGN/docs/ + every

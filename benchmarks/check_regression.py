@@ -26,7 +26,15 @@ fixed) would merge green.  Now CI fails when either
 * the scale benchmark regresses: CIDER's weak-scaling efficiency falls
   below a committed per-mesh floor, CIDER stops leading steady-state
   ``modeled_mops`` at any reported mesh, or CIDER loses the open-loop p99
-  tail lead at the top offered load (``check_scale``, docs/METRICS.md).
+  tail lead at the top offered load (``check_scale``, docs/METRICS.md), or
+* the replication benchmark breaks its contract (``check_replication``,
+  docs/METRICS.md): the R=1 rows stop reproducing the engine benchmark to
+  the digit (the replica fan-out must stay a byte-identical no-op at R=1),
+  any R>1 cell violates the xR write-fan-out conservation law (write-class
+  verbs xR, reads x1, ``mn_bytes = ro + R*wr`` — the check that catches a
+  replicated-CAS cost omission), or the MN-crash failover cell loses its
+  asserted bit-equality.  CIDER's per-R lead and modeled_mops floors ride
+  the generic ``check`` via the ``replication/R*/...`` rows.
 
 ``--summary`` additionally writes a markdown gate table (check x metric,
 floor vs actual, pass/fail) to ``$GITHUB_STEP_SUMMARY`` (stdout when unset)
@@ -41,7 +49,8 @@ platform-gated exception, with a correspondingly loose band.
     PYTHONPATH=src python -m benchmarks.check_regression --update-baseline
 
 Run ``make bench-smoke bench-ycsb-smoke bench-scenarios-smoke
-bench-recovery-smoke`` first (CI does); use ``--update-baseline`` after an
+bench-recovery-smoke bench-scale-smoke bench-replication-smoke`` first (CI
+does); use ``--update-baseline`` after an
 intentional perf change to rewrite ``benchmarks/baselines.json`` from the
 current fast JSONs.
 """
@@ -63,13 +72,13 @@ def _load(path: str, what: str) -> dict:
         raise SystemExit(
             f"missing {what} {path!r} — run `make bench-smoke "
             f"bench-ycsb-smoke bench-scenarios-smoke bench-recovery-smoke "
-            f"bench-scale-smoke` first")
+            f"bench-scale-smoke bench-replication-smoke` first")
     with open(path) as f:
         return json.load(f)
 
 
 def _collect(engine: dict, scenarios: dict, recovery: dict,
-             ycsb: dict) -> dict:
+             ycsb: dict, replication: dict | None = None) -> dict:
     """{check_name: {mode: modeled_mops}} for every gated benchmark."""
     out = {"engine": {m: engine[m]["modeled_mops"] for m in MODES}}
     for name, topos in ycsb["workloads"].items():
@@ -83,6 +92,14 @@ def _collect(engine: dict, scenarios: dict, recovery: dict,
     for name, sc in recovery["scenarios"].items():
         out[f"recovery/{name}"] = {
             m: sc["modes"][m]["modeled_mops"] for m in MODES}
+    if replication is not None:
+        for r, topos in replication["replicas"].items():
+            for topo, recs in topos.items():
+                out[f"replication/R{r}/{topo}"] = {
+                    m: recs[m]["modeled_mops"] for m in MODES}
+        out["replication/mn_crash"] = {
+            m: replication["mn_crash"]["modes"][m]["modeled_mops"]
+            for m in MODES}
     return out
 
 
@@ -197,6 +214,82 @@ def check_scale(scale: dict, baseline: dict, tolerance: float) -> list[str]:
     return failures
 
 
+# the replication contract's field split (core.types.per_replica_bill,
+# DESIGN.md §13): write-class verbs fan out xR, reads and the observable-only
+# counters bill once; the R=1 rows must be digit-exact against the engine JSON
+REPL_WRITE_FIELDS = ("writes", "cas", "faa", "retries", "repair_cas")
+REPL_READ_FIELDS = ("reads", "cn_msgs", "combined", "executed",
+                    "orphan_windows")
+REPL_EXACT_KEYS = REPL_WRITE_FIELDS + REPL_READ_FIELDS + (
+    "mn_bytes", "mn_iops", "modeled_mops", "modeled_p50_us", "modeled_p99_us")
+
+
+def check_replication(replication: dict, engine: dict) -> list[str]:
+    """Replication-contract floors over ``BENCH_replication*.json``.
+
+    Three gates (docs/METRICS.md):
+
+    * **R=1 exact match** — the replica fan-out is a Python-level branch
+      that must compile the byte-identical R=1 program, so every R=1
+      single-device row must equal the engine benchmark's row to the digit
+      (both JSONs run the same recipe at the same ``--fast`` size);
+    * **xR conservation** — each R>1 single cell's write-class verbs must
+      be exactly R x the R=1 cell's, reads/observables x1, and the byte
+      bill must decompose as ``ro + R*wr``.  An engine change that forgets
+      to replicate a write-class verb (e.g. drops the CAS fan-out) breaks
+      the multiplier and fails here;
+    * **failover equality witness** — the MN-crash cell must carry the
+      harness's ``asserted_equal`` flag (the bit-equality against the
+      segmented n_replicas-swap reference ran and passed).
+    """
+    failures = []
+    repl_fast = replication.get("config", {}).get("fast")
+    eng_fast = engine.get("config", {}).get("fast")
+    if repl_fast != eng_fast:
+        return [f"replication: size mismatch with the engine JSON "
+                f"(fast={repl_fast} vs {eng_fast}) — the R=1 exact-match "
+                f"gate needs both benchmarks at the same size"]
+    rows1 = replication["replicas"]["1"]["single"]
+    for mode in MODES:
+        for k in REPL_EXACT_KEYS:
+            if rows1[mode][k] != engine[mode][k]:
+                failures.append(
+                    f"replication/R1/{mode}: {k} {rows1[mode][k]} != engine "
+                    f"benchmark's {engine[mode][k]} — n_replicas=1 is no "
+                    f"longer a byte-identical no-op")
+    for r_str, topos in replication["replicas"].items():
+        r = int(r_str)
+        if r == 1:
+            continue
+        for mode in MODES:
+            one, tot = rows1[mode], topos["single"][mode]
+            for f in REPL_WRITE_FIELDS:
+                if tot[f] != r * one[f]:
+                    failures.append(
+                        f"replication/R{r}/{mode}: write verb '{f}' "
+                        f"violates the x{r} fan-out ({tot[f]} != "
+                        f"{r} * {one[f]}) — a replica's bill went missing")
+            for f in REPL_READ_FIELDS:
+                if tot[f] != one[f]:
+                    failures.append(
+                        f"replication/R{r}/{mode}: read/observable field "
+                        f"'{f}' changed under replication ({tot[f]} != "
+                        f"{one[f]}); reads bill to one replica")
+            wr, rem = divmod(tot["mn_bytes"] - one["mn_bytes"], r - 1)
+            if rem or wr < 0 or wr > one["mn_bytes"]:
+                failures.append(
+                    f"replication/R{r}/{mode}: byte bill "
+                    f"{one['mn_bytes']} -> {tot['mn_bytes']} is not "
+                    f"ro + {r}*wr")
+    for mode, cell in replication["mn_crash"]["modes"].items():
+        if not cell.get("asserted_equal"):
+            failures.append(
+                f"replication/mn_crash/{mode}: failover bit-equality "
+                f"witness missing — the harness no longer asserts the "
+                f"segmented n_replicas-swap reference")
+    return failures
+
+
 def check(actual: dict, baseline: dict, tolerance: float) -> list[str]:
     failures = []
     # a baselined benchmark that disappears from the JSONs is a gate bypass,
@@ -226,8 +319,8 @@ def check(actual: dict, baseline: dict, tolerance: float) -> list[str]:
 
 
 def summary_rows(actual: dict, baseline: dict, engine: dict, scale: dict,
-                 recovery: dict, tolerance: float, wall_tolerance: float
-                 ) -> list[tuple]:
+                 recovery: dict, tolerance: float, wall_tolerance: float,
+                 replication: dict | None = None) -> list[tuple]:
     """(check, metric, floor, actual, status) per gate — the exit code comes
     from the check_* functions; these rows re-state the same comparisons for
     the markdown gate table."""
@@ -288,6 +381,25 @@ def summary_rows(actual: dict, baseline: dict, engine: dict, scale: dict,
         rows.append(("scale/open_loop", "CIDER p99 @ top load",
                      f"<= {num(floor)}", num(got),
                      "PASS" if got <= floor else "FAIL"))
+    if replication is not None:
+        repl_fails = check_replication(replication, engine)
+        exact = not any("/R1/" in f or "size mismatch" in f
+                        for f in repl_fails)
+        rows.append(("replication/R1", "bit-identity vs engine",
+                     "== engine JSON", "match" if exact else "DIVERGED",
+                     "PASS" if exact else "FAIL"))
+        for r_str in sorted(replication.get("replicas", {}), key=int):
+            if r_str == "1":
+                continue
+            ok = not any(f"/R{r_str}/" in f for f in repl_fails)
+            rows.append((f"replication/R{r_str}", "xR write conservation",
+                         f"write verbs x{r_str}, reads x1",
+                         "holds" if ok else "VIOLATED",
+                         "PASS" if ok else "FAIL"))
+        ok = not any("mn_crash" in f for f in repl_fails)
+        rows.append(("replication/mn_crash", "failover bit-equality",
+                     "asserted_equal", "witnessed" if ok else "MISSING",
+                     "PASS" if ok else "FAIL"))
     return rows
 
 
@@ -327,6 +439,7 @@ def main():
     ap.add_argument("--recovery", default="BENCH_recovery.fast.json")
     ap.add_argument("--ycsb", default="BENCH_ycsb.fast.json")
     ap.add_argument("--scale", default="BENCH_scale.fast.json")
+    ap.add_argument("--replication", default="BENCH_replication.fast.json")
     ap.add_argument("--baseline", default=DEFAULT_BASELINE)
     ap.add_argument("--summary", action="store_true",
                     help="write the markdown gate table to "
@@ -347,7 +460,8 @@ def main():
     recovery = _load(args.recovery, "recovery benchmark")
     ycsb = _load(args.ycsb, "ycsb suite benchmark")
     scale = _load(args.scale, "scale benchmark")
-    actual = _collect(engine, scenarios, recovery, ycsb)
+    replication = _load(args.replication, "replication benchmark")
+    actual = _collect(engine, scenarios, recovery, ycsb, replication)
 
     if args.update_baseline:
         payload = {
@@ -382,9 +496,11 @@ def main():
     failures += check_recovery(recovery)
     failures += check_wall(engine, baseline, args.wall_tolerance)
     failures += check_scale(scale, baseline, args.tolerance)
+    failures += check_replication(replication, engine)
     if args.summary:
         write_summary(summary_rows(actual, baseline, engine, scale, recovery,
-                                   args.tolerance, args.wall_tolerance),
+                                   args.tolerance, args.wall_tolerance,
+                                   replication=replication),
                       failures)
     if failures:
         print(f"PERF REGRESSION GATE: {len(failures)} failure(s)")

@@ -27,7 +27,7 @@ per-key ``hot`` flag choosing the optimistic vs pessimistic UPDATE path
 (both settings are explored).  INSERT is always the optimistic slot-claim
 CAS (§4.2.2); SEARCH/SCAN are lock-free atomic reads.
 
-``ModelFlags`` re-introduces two seeded bugs so ``tests/test_analysis.py``
+``ModelFlags`` re-introduces three seeded bugs so ``tests/test_analysis.py``
 can prove the checker *detects* what it claims to:
 
 * ``combine_covers_deletes=True`` — the lost-delete race this checker
@@ -35,7 +35,22 @@ can prove the checker *detects* what it claims to:
   coordinator's combined batch completes without its own MCAS; fixed by
   the ``del_q`` coordinator gate);
 * ``repair_requires_dead_holder=False`` — §4.6 repair that may break a
-  live lock (mutual-exclusion and skipped-waiter violations follow).
+  live lock (mutual-exclusion and skipped-waiter violations follow);
+* ``stale_replica_read=True`` — a replicated read served from one
+  arbitrary replica instead of the max-version resolution the
+  client-centric replication contract requires (DESIGN.md §13).
+
+A second, replicated machine (``ReplScenario`` / ``explore_replicated``)
+models the DESIGN.md §13 client-centric replication plane over
+``N_REPLICAS = 2`` memory nodes: a write commits at the primary CAS,
+then fans out to the secondary as a separate step guarded by a
+last-writer-wins version CAS, and the injected crash may land *between*
+the two — leaving the replicas divergent.  Real reads resolve the
+max-version cell across all replicas and repair laggards (roll-forward);
+the seeded ``stale_replica_read`` bug serves whichever single replica
+the scheduler picks, and the checker catches the divergence twice over
+(the oracle replay and an explicit stale-read record naming the
+divergent replicas).
 
 ``run()`` additionally executes a tick-level conformance scenario on the
 *real* ``protocol.tick`` machine, proving the model's delete gate and the
@@ -53,10 +68,12 @@ from repro.core.oracle import OracleStore
 from repro.core.types import OpKind, SyncMode
 
 __all__ = ["ModelFlags", "Scenario", "explore", "scenarios", "run",
-           "N_KEYS", "SCAN_COUNT"]
+           "ReplScenario", "explore_replicated", "repl_scenarios",
+           "N_KEYS", "SCAN_COUNT", "N_REPLICAS"]
 
 N_KEYS = 2           # model key space {0, 1}
 SCAN_COUNT = 2       # SCAN covers [0, 2) — both keys
+N_REPLICAS = 2       # replicated-write model: primary + one secondary
 
 # client program counters
 START, OCAS, WAIT, CS, REL, DONE = range(6)
@@ -68,6 +85,7 @@ class ModelFlags:
     """Protocol variants: the real machine, plus seeded-bug re-injections."""
     combine_covers_deletes: bool = False      # True = pre-fix lost-delete bug
     repair_requires_dead_holder: bool = True  # False = repair may break live locks
+    stale_replica_read: bool = False          # True = read one arbitrary replica
 
 
 REAL = ModelFlags()
@@ -368,10 +386,17 @@ def _check_terminal(sc: Scenario, st: St, msgs: set) -> None:
         if not owner_was_crashed:
             msgs.add(f"§4.6 repair broke a LIVE lock on key {key} "
                      f"(owner client {owner} had not crashed)")
-    # oracle replay: commit order must be a correct sequential history
+    _replay_oracle(sc, st.events,
+                   {k: v for k, (v, _) in enumerate(st.store)
+                    if v is not None}, msgs)
+
+
+def _replay_oracle(sc, events: tuple, model_kv: dict, msgs: set) -> None:
+    """Oracle replay: commit order must be a correct sequential history
+    and the terminal (resolved) store must match the oracle's."""
     oracle = OracleStore()
     oracle.populate(list(sc.init_keys), [0] * len(sc.init_keys))
-    for ev in st.events:
+    for ev in events:
         ok, out = oracle.apply([ev.kind], [ev.key], [ev.value],
                                scan_max=SCAN_COUNT)
         if bool(ok[0]) != ev.ok:
@@ -383,7 +408,6 @@ def _check_terminal(sc: Scenario, st: St, msgs: set) -> None:
         elif ev.kind == OpKind.SCAN and int(oracle.rows[0]) != ev.out:
             msgs.add(f"oracle replay diverges: {_op_name(sc, ev.cid)} saw "
                      f"{ev.out} rows, oracle says {int(oracle.rows[0])}")
-    model_kv = {k: v for k, (v, _) in enumerate(st.store) if v is not None}
     if model_kv != oracle.kv:
         msgs.add(f"terminal store diverges from oracle replay: "
                  f"model={model_kv} oracle={oracle.kv}")
@@ -445,6 +469,211 @@ def scenarios(quick: bool = True):
                     yield Scenario(mode, trip, tuple(init), hot)
 
 
+# ---------------------------------------------- replicated-write machine
+# Client-centric MN replication (DESIGN.md §13): no replica runs a CPU —
+# the WRITING client updates every replica itself.  The write commits at
+# the primary CAS; the secondary fan-out is a separate step guarded by a
+# last-writer-wins version CAS, and the (single) injected crash may land
+# between the two, leaving the replicas divergent.  Real reads resolve
+# the max-version cell across ALL replicas and write the laggards back
+# (repair modeled atomic with the read — dropping interleavings never
+# hides a bug, it only strengthens the machine the seeded fixture must
+# still defeat).  ``ModelFlags.stale_replica_read`` serves whichever
+# single replica the scheduler picks instead: after a partial fan-out the
+# read returns the stale cell and the checker flags it twice — the oracle
+# replay diverges, and an explicit record names the divergent replicas.
+
+RSTART, RFAN, RDONE = range(3)
+_R_PC_NAME = ("START", "FAN", "DONE")
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplScenario:
+    """A replicated-write model instance: per-client (kind, key) programs
+    over ``N_REPLICAS`` replica stores."""
+    ops: tuple                       # per client: (kind, key)
+    init_keys: tuple                 # keys present at start on ALL replicas
+    flags: ModelFlags = REAL
+
+    def value(self, cid: int) -> int:
+        return SCAN_COUNT if self.ops[cid][0] == OpKind.SCAN else 100 + cid
+
+    def describe(self) -> str:
+        ops = ",".join(f"{OpKind(k).name}{key}" for k, key in self.ops)
+        bug = " stale_replica_read" if self.flags.stale_replica_read else ""
+        return f"REPL[{ops}] init={list(self.init_keys)}{bug}"
+
+
+class RSt(NamedTuple):
+    stores: tuple          # per replica: per key (val | None, ver)
+    clients: tuple         # Cl per client (ticket unused, -1)
+    crashed: tuple
+    events: tuple          # Ev, commit order (= primary CAS order)
+    stale: tuple           # (key, replica, got_ver, best_replica, best_ver)
+
+
+def _resolved(stores: tuple) -> tuple:
+    """Per-key last-writer-wins resolution: the max-version cell wins."""
+    return tuple(max((stores[r][k] for r in range(N_REPLICAS)),
+                     key=lambda cell: cell[1])
+                 for k in range(N_KEYS))
+
+
+def _r_read_keys(kind: int, key: int) -> range:
+    return range(key, min(key + SCAN_COUNT, N_KEYS)) \
+        if kind == OpKind.SCAN else range(key, key + 1)
+
+
+def _r_steps(sc: ReplScenario, st: RSt, cid: int) -> list[RSt]:
+    """All real (non-crash) successor states from client ``cid``."""
+    kind, key = sc.ops[cid]
+    cl = st.clients[cid]
+    value = sc.value(cid)
+
+    if kind in (OpKind.SEARCH, OpKind.SCAN):
+        if sc.flags.stale_replica_read:
+            # seeded bug: serve ONE arbitrary replica, no resolution/repair
+            best = _resolved(st.stores)
+            outs = []
+            for r in range(N_REPLICAS):
+                _, ok, res = _apply(st.stores[r], kind, key, value)
+                stale = st.stale
+                for k in _r_read_keys(kind, key):
+                    if st.stores[r][k][1] < best[k][1]:
+                        br = max(range(N_REPLICAS),
+                                 key=lambda i: st.stores[i][k][1])
+                        stale = stale + (
+                            (k, r, st.stores[r][k][1], br, best[k][1]),)
+                ev = Ev(cid, -1, kind, key, value, ok, res)
+                outs.append(st._replace(
+                    events=st.events + (ev,), stale=stale,
+                    clients=_set(st.clients, cid,
+                                 cl._replace(pc=RDONE, ok=ok, out=res))))
+            return outs
+        # real machine: max-version resolution + roll-forward repair
+        best = _resolved(st.stores)
+        _, ok, res = _apply(best, kind, key, value)
+        stores = tuple(
+            tuple(best[k] if k in _r_read_keys(kind, key) else store[k]
+                  for k in range(N_KEYS))
+            for store in st.stores)
+        ev = Ev(cid, -1, kind, key, value, ok, res)
+        return [st._replace(
+            stores=stores, events=st.events + (ev,),
+            clients=_set(st.clients, cid,
+                         cl._replace(pc=RDONE, ok=ok, out=res)))]
+
+    if cl.pc == RSTART:
+        # primary CAS: the commit point — the event lands here
+        store2, ok, res = _apply(st.stores[0], kind, key, value)
+        ev = Ev(cid, -1, kind, key, value, ok, res)
+        nxt = cl._replace(pc=RFAN if ok else RDONE,
+                          aux=("fan", key, store2[key]) if ok else None,
+                          ok=ok, out=res)
+        return [st._replace(
+            stores=_set(st.stores, 0, store2),
+            events=st.events + (ev,),
+            clients=_set(st.clients, cid, nxt))]
+    if cl.pc == RFAN:
+        # secondary fan-out: last-writer-wins version CAS per replica
+        _, fkey, cell = cl.aux
+        stores = st.stores
+        for r in range(1, N_REPLICAS):
+            if stores[r][fkey][1] < cell[1]:
+                stores = _set(stores, r, _set(stores[r], fkey, cell))
+        return [st._replace(
+            stores=stores,
+            clients=_set(st.clients, cid,
+                         cl._replace(pc=RDONE, aux=None)))]
+    return []
+
+
+def _r_check_terminal(sc: ReplScenario, st: RSt, msgs: set) -> None:
+    for i, c in enumerate(st.clients):
+        if not st.crashed[i] and c.pc != RDONE:
+            msgs.add(f"liveness: {_op_name(sc, i)} is stuck at "
+                     f"pc={_R_PC_NAME[c.pc]} with no step left")
+    counts = Counter(ev.cid for ev in st.events)
+    for i, c in enumerate(st.clients):
+        if not st.crashed[i] and c.pc == RDONE and counts.get(i, 0) != 1:
+            msgs.add(f"{_op_name(sc, i)} completed with {counts.get(i, 0)} "
+                     f"committed events — its op was lost (or duplicated)")
+    for k, r, got_ver, best_r, best_ver in st.stale:
+        msgs.add(f"stale-replica read on key {k}: served replica {r} at "
+                 f"version {got_ver} while replica {best_r} held version "
+                 f"{best_ver} — replicas diverge and the read skipped "
+                 f"last-writer-wins resolution")
+    if not any(st.crashed):
+        # no crash: every fan-out completed, so replicas must agree
+        for k in range(N_KEYS):
+            cells = {st.stores[r][k] for r in range(N_REPLICAS)}
+            if len(cells) > 1:
+                per = ", ".join(f"replica {r}={st.stores[r][k]}"
+                                for r in range(N_REPLICAS))
+                msgs.add(f"replicas diverge at quiescence on key {k} "
+                         f"with no crash: {per}")
+    best = _resolved(st.stores)
+    _replay_oracle(sc, st.events,
+                   {k: v for k, (v, _) in enumerate(best)
+                    if v is not None}, msgs)
+
+
+def explore_replicated(sc: ReplScenario, allow_crash: bool = True,
+                       max_states: int = 200_000
+                       ) -> tuple[list[Violation], int]:
+    """DFS every interleaving of the replicated machine for ``sc``."""
+    init = RSt(
+        stores=tuple(tuple((0, 0) if k in sc.init_keys else (None, 0)
+                           for k in range(N_KEYS))
+                     for _ in range(N_REPLICAS)),
+        clients=tuple(Cl(RSTART, -1, None, False, -1) for _ in sc.ops),
+        crashed=(False,) * len(sc.ops), events=(), stale=())
+    seen = {init}
+    stack = [init]
+    msgs: set[str] = set()
+    n = 0
+    while stack:
+        st = stack.pop()
+        n += 1
+        if n > max_states:
+            msgs.add(f"state-space blowup: more than {max_states} states")
+            break
+        real: list[RSt] = []
+        crash: list[RSt] = []
+        can_crash = allow_crash and not any(st.crashed)
+        for cid, cl in enumerate(st.clients):
+            if st.crashed[cid] or cl.pc == RDONE:
+                continue
+            real.extend(_r_steps(sc, st, cid))
+            if can_crash:
+                crash.append(st._replace(crashed=_set(st.crashed, cid, True)))
+        if not real:
+            _r_check_terminal(sc, st, msgs)
+        for nxt in real + crash:
+            if nxt not in seen:
+                seen.add(nxt)
+                stack.append(nxt)
+    return ([Violation("race_check", sc.describe(), m) for m in sorted(msgs)],
+            len(seen))
+
+
+def repl_scenarios(quick: bool = True):
+    """The replicated scenario space: every op pair over both keys plus
+    the writer/writer/reader triples on key 0, each against every initial
+    store — crash-at-any-step lands between primary CAS and fan-out."""
+    point = [OpKind.SEARCH, OpKind.INSERT, OpKind.UPDATE, OpKind.DELETE]
+    ops = [(k, key) for k in point for key in range(N_KEYS)] \
+        + [(OpKind.SCAN, 0)]
+    stores = [(), (0,), (0, 1)] if quick else [(), (0,), (1,), (0, 1)]
+    ops3 = [o for o in ops if o[1] == 0]
+    for pair in itertools.combinations_with_replacement(ops, 2):
+        for init in stores:
+            yield ReplScenario(pair, tuple(init))
+    for trip in itertools.combinations_with_replacement(ops3, 3):
+        for init in stores:
+            yield ReplScenario(trip, tuple(init))
+
+
 # ------------------------------------------------- tick-level conformance
 def _sim_conformance(notes: list[str] | None) -> list[Violation]:
     """Prove the shipped ``del_q`` gate on the real ``protocol.tick``
@@ -501,10 +730,12 @@ def _sim_conformance(notes: list[str] | None) -> list[Violation]:
 
 def run(notes: list[str] | None = None, quick: bool = True,
         max_report: int = 64) -> list[Violation]:
-    """Model-check every scenario with the REAL protocol flags, then the
+    """Model-check every scenario with the REAL protocol flags — the
+    per-mode machines, then the replicated-write machine — then the
     tick-level conformance check against ``protocol.tick``."""
     out: list[Violation] = []
     n_sc = n_states = 0
+    truncated = False
     for sc in scenarios(quick=quick):
         viols, states = explore(sc)
         out.extend(viols)
@@ -513,9 +744,22 @@ def run(notes: list[str] | None = None, quick: bool = True,
         if len(out) >= max_report:
             out.append(Violation("race_check", "(reporting)",
                                  f"truncated after {max_report} violations"))
+            truncated = True
             break
+    n_rsc = n_rstates = 0
+    if not truncated:
+        for rsc in repl_scenarios(quick=quick):
+            viols, states = explore_replicated(rsc)
+            out.extend(viols)
+            n_rsc += 1
+            n_rstates += states
+            if len(out) >= max_report:
+                out.append(Violation("race_check", "(reporting)",
+                                     f"truncated after {max_report} "
+                                     f"violations"))
+                break
     if notes is not None:
-        notes.append(f"race_check: {n_sc} scenarios, "
-                     f"{n_states} states explored")
+        notes.append(f"race_check: {n_sc} scenarios, {n_states} states + "
+                     f"{n_rsc} replicated scenarios, {n_rstates} states")
     out.extend(_sim_conformance(notes))
     return out

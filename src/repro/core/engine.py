@@ -49,6 +49,19 @@ The shard_map path (``repro.dist.store``) partitions the store over the
 credit plane still sees the full window (see ``apply_batch``'s docstring and
 DESIGN.md §3.3).
 
+Replication (SNAPSHOT client-centric, FUSEE; DESIGN.md §13): with
+``EngineConfig.n_replicas = R > 1`` every write-class verb — WRITEs, CASes
+(lock words, pointer installs, retries, SCAN lock traversals, §4.6 repair
+break-CASes) and FAAs — fans out from the client to all R replica MNs, while
+reads (index READs, SEARCH payloads, the CIDER coordinator lock read, the
+repair stale-epoch detection read, SCAN probes) bill to one replica.  The
+scaling is a static end-of-metering block on the aggregate bill: read-only
+bytes are tracked separately (``ro_bytes``) so
+``mn_bytes = ro + R * wr`` exactly, and R=1 skips the block entirely — the
+compiled program is byte-identical to the pre-replication engine.  Results
+are replica-count-invariant: replicas hold identical logical state, so
+per-op outcomes, combining, ranks and waits never see R.
+
 Crash recovery (§4.6, DESIGN.md §8): ``apply_batch`` additionally accepts a
 liveness plane (``alive``/``died`` CN masks).  Ops from dead CNs are dropped
 at the window boundary; the pessimistic writes a newly-died CN had in flight
@@ -400,6 +413,9 @@ def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
     n_found_search = jnp.sum(((ks == OpKind.SEARCH) & ok_s).astype(jnp.int32))
     reads = s(valid_o) * cfg.index_read_iops + n_found_search
     mn_bytes = (s(valid_o) * cfg.index_read_bytes + n_found_search * cfg.value_bytes)
+    # read-only bytes bill to ONE replica under replication (DESIGN.md §13);
+    # every other mn_bytes contribution below is write-class and fans out xR
+    ro_bytes = mn_bytes
     writes = jnp.zeros((), i64)
     cas = jnp.zeros((), i64)
     faa = jnp.zeros((), i64)
@@ -486,6 +502,7 @@ def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
                                plan_p.mult_of + 1, 0))
         mn_bytes += (m_pe * cfg.ptr_bytes + n_q * (cfg.value_bytes + cfg.ptr_bytes)
                      + m_pe * 8 + n_multi_q * cfg.lock_bytes)
+        ro_bytes += n_multi_q * cfg.lock_bytes       # coordinator tail READ
         combined_total += s(pess) - n_q
         per_op_combined = per_op_combined | (pess & ~is_exec)
         per_op_batch = jnp.where(loc_exec_pess, plan_p.mult_of, per_op_batch)
@@ -562,6 +579,7 @@ def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
         cas += n_repair
         repair_total += n_repair
         mn_bytes += n_repair * (cfg.lock_bytes + 8)
+        ro_bytes += n_repair * cfg.lock_bytes        # stale-epoch detection READ
         if cfg.mode == SyncMode.SPIN:
             # spinners keep re-CASing the orphaned word until the lease
             # expires — MN verbs MCS/CIDER waiters never issue (they wait
@@ -632,12 +650,14 @@ def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
         # row found (every mode traverses the same run)
         reads += n_probes + n_rows
         mn_bytes += n_probes * cfg.ptr_bytes + n_rows * cfg.value_bytes
+        ro_bytes += n_probes * cfg.ptr_bytes + n_rows * cfg.value_bytes
         if cfg.mode == SyncMode.OSYNC:
             # optimistic traversal must re-read each leaf's version to
             # validate against concurrent pointer swaps (§2.2's cost, paid
             # per leaf whether or not anyone wrote)
             reads += n_probes
             mn_bytes += n_probes * cfg.ptr_bytes
+            ro_bytes += n_probes * cfg.ptr_bytes
         elif cfg.mode == SyncMode.SPIN:
             # a CAS spinlock has no shared mode: lock + unlock CAS per leaf
             cas += 2 * n_probes
@@ -668,6 +688,23 @@ def apply_batch(cfg: EngineConfig, state: StoreState, credits: CreditState,
                 jnp.where(readers_s, waits_s, 0))
             per_op_rank = jnp.where(p_in[:, 0], waits[b:].reshape(b, ns)[:, 0],
                                     per_op_rank)
+
+    # ---- 5d. SNAPSHOT replica fan-out (FUSEE; DESIGN.md §13) --------------
+    # Client-centric replication: the client issues every write-class verb
+    # to all R replica MNs itself (no MN CPU forwards anything), so the
+    # aggregate bill scales exactly xR on WRITE/CAS/FAA — including retries
+    # and repair break-CASes, which are failed/extra CASes on every replica's
+    # word — while reads go to one replica.  Static branch: R=1 compiles to
+    # the byte-identical pre-replication program (tests/test_replication.py).
+    # Per-op Results are logical-op observables and never scale.
+    if cfg.n_replicas > 1:
+        rep = cfg.n_replicas
+        writes = writes * rep
+        cas = cas * rep
+        faa = faa * rep
+        retries_total = retries_total * rep
+        repair_total = repair_total * rep
+        mn_bytes = ro_bytes + rep * (mn_bytes - ro_bytes)
 
     # ---- 6. credit feedback (§4.3, Algorithm 1 lines 13-22) ---------------
     # Like the decision, feedback runs on the FULL window so replicated

@@ -194,6 +194,7 @@ def tick(p: SimParams, mode: SyncMode, streams, state: SimState, t
     issue_bytes = jnp.zeros((n,), jnp.int32)
     issue_cost = jnp.zeros((n,), jnp.int32)
     issue_atomic = jnp.zeros((n,), bool)
+    issue_repl = jnp.zeros((n,), bool)
     new_phase = s.phase
     new_ready = s.ready
     verbs = s.verbs
@@ -206,19 +207,34 @@ def tick(p: SimParams, mode: SyncMode, streams, state: SimState, t
     def issue(m, phase_id, verb, nbytes, lock_addr=False):
         """``lock_addr``: the verb targets the key's LOCK ENTRY, a different
         memory word than the data pointer — atomics on the two serialize
-        independently at the RNIC."""
+        independently at the RNIC.
+
+        SNAPSHOT replication (DESIGN.md §13): write-class verbs fan out from
+        the client to all ``p.n_replicas`` replica MNs — xR capacity tokens,
+        bytes, and verb counts on the shared MN fleet — and the lane waits
+        ``p.replica_rtt`` extra ticks for the slowest replica's ack (applied
+        after ``issue_mn``).  Each replica's copy of a hot word serializes at
+        its own RNIC in parallel, so per-address arrivals stay x1.  Reads go
+        to one replica.  Static: R=1 builds the pre-replication program.
+        """
         nonlocal issue_mask, issue_bytes, issue_cost, issue_atomic, issue_addr
-        nonlocal new_phase, verbs
+        nonlocal issue_repl, new_phase, verbs
         atomic = verb in (V_CAS, V_FAA)
+        rep = p.n_replicas if (p.n_replicas > 1
+                               and verb in (V_WRITE, V_CAS, V_FAA)) else 1
         issue_mask = issue_mask | m
-        issue_bytes = jnp.where(m, nbytes, issue_bytes)
-        issue_cost = jnp.where(m, p.atomic_cost if atomic else 1, issue_cost)
+        issue_bytes = jnp.where(m, nbytes * rep, issue_bytes)
+        issue_cost = jnp.where(m, (p.atomic_cost if atomic else 1) * rep,
+                               issue_cost)
         if atomic:
             issue_atomic = issue_atomic | m
+        if rep > 1:
+            issue_repl = issue_repl | m
         if lock_addr:
             issue_addr = jnp.where(m, s.hkey + H, issue_addr)
         new_phase = jnp.where(m, phase_id, new_phase)
-        verbs = verbs.at[verb].add(jnp.sum(m.astype(jnp.int32)))
+        count = jnp.sum(m.astype(jnp.int32))
+        verbs = verbs.at[verb].add(count if rep == 1 else rep * count)
 
     def cn_hop(m, phase_id):
         nonlocal new_phase, new_ready, verbs
@@ -538,6 +554,10 @@ def tick(p: SimParams, mode: SyncMode, streams, state: SimState, t
     # ============ network: issue all MN verbs of this tick ===================
     net2, done_at = issue_mn(s.net, t, issue_mask, issue_bytes, issue_cost,
                              issue_atomic, issue_addr, p)
+    if p.n_replicas > 1:
+        # replicated write-class verbs complete at the SLOWEST replica: one
+        # extra replica_rtt on top of the primary's completion tick
+        done_at = done_at + jnp.where(issue_repl, p.replica_rtt, 0)
     new_ready = jnp.where(issue_mask, done_at, new_ready)
 
     return SimState(

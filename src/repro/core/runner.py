@@ -367,6 +367,22 @@ def modeled_latency(cfg: EngineConfig, kinds, res: Results, p: SimParams,
         verbs = np.where(scan, scan_base + 2.0 * counts, verbs)
     else:  # CIDER: hot-anchor proxy for the credit-hot leaf subset
         verbs = np.where(scan, scan_base + 2.0 * (rank > 0), verbs)
+    # SNAPSHOT replication (DESIGN.md §13): write-class verbs fan out to all
+    # R replica MNs, so the backlog everyone queues behind scales on the
+    # write portion of each op's footprint (reads — index resolves, SEARCH
+    # payloads, SCAN probe READs — stay x1); the op itself additionally
+    # waits one `replica_rtt` for the slowest replica's ack.  R=1 skips both
+    # terms, keeping the pre-replication latencies bit-exact.
+    rep = float(p.n_replicas)
+    if rep > 1.0:
+        ro = np.full(kinds.shape, idx, np.float64)
+        ro = np.where(search, idx + ok, ro)
+        ro = np.where(scan, scan_base, ro)
+        if cfg.mode == SyncMode.OSYNC:
+            ro = np.where(scan, scan_base + counts, ro)
+        verbs = ro + rep * (verbs - ro)
+        extra = np.where(insert | update | delete,
+                         extra + float(p.replica_rtt), extra)
     verbs = np.where(valid, verbs, 0.0)
     backlog = np.cumsum(verbs, axis=-1) - verbs
     # orphaned-lock lease waits: each unit is one lease expiry + the

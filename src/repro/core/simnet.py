@@ -68,6 +68,14 @@ class SimParams:
     hc_bits: int = 10            # per-CN credit table
     hl_bits: int = 10            # per-CN local-WC table
     hist_buckets: int = 2048     # latency histogram (1 us buckets)
+    # SNAPSHOT client-centric replication (FUSEE; DESIGN.md §13): every
+    # write-class verb (WRITE/CAS/FAA) fans out from the client to all
+    # n_replicas replica MNs — xR tokens and bytes on the shared MN fleet —
+    # and the issuing lane additionally waits `replica_rtt` ticks for the
+    # slowest replica's ack.  Reads go to one replica.  n_replicas=1
+    # reproduces the pre-replication sim tick-exactly (static branch).
+    n_replicas: int = 1
+    replica_rtt: int = 2
     # fault tolerance (§4.6)
     fail_lane: int = -1          # lane that dies ...
     fail_tick: int = -1          # ... at this tick (-1 = no failure)

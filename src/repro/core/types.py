@@ -23,6 +23,7 @@ import numpy as np
 __all__ = [
     "OpKind", "Verb", "SyncMode", "IOMetrics", "LatencyStats", "EngineConfig",
     "OpBatch", "NULL_PTR", "UnsupportedOpError", "io_zeros", "io_add",
+    "per_replica_bill",
 ]
 
 # A null data pointer (empty slot). Pointers are int32 heap indices >= 0.
@@ -127,6 +128,65 @@ def io_add(a: IOMetrics, b: IOMetrics) -> IOMetrics:
     return jax.tree.map(lambda x, y: x + y, a, b)
 
 
+def per_replica_bill(io_one: IOMetrics, io_r: IOMetrics,
+                     n_replicas: int) -> list[dict[str, int]]:
+    """Decompose a replicated bill into per-replica-MN bills (host-side).
+
+    ``io_one`` is the ``n_replicas=1`` bill of a run and ``io_r`` the
+    ``n_replicas=R`` bill of the *same* run.  Under SNAPSHOT client-centric
+    replication (DESIGN.md §13) the engine fans every write-class verb
+    (WRITE/CAS/FAA, their retries, and §4.6 repair break-CASes) out to all R
+    replica MNs while reads — index READs, coordinator lock reads, repair
+    stale-epoch detection reads, SCAN probes — go to the primary only, so
+    the totals determine the split exactly:
+
+    * every replica carries the R=1 write-class verbs and write bytes
+      (``wr = (io_r.mn_bytes - io_one.mn_bytes) / (R - 1)``),
+    * the primary (replica 0) additionally carries all reads, read bytes,
+      and the observable-only counters (cn_msgs/combined/executed/
+      orphan_windows), which are logical-op properties, not fan-out.
+
+    Raises ``ValueError`` if the two bills are not consistent with the ×R
+    contract — this is the conservation law the property tests enforce:
+    summing the returned dicts field-by-field reproduces ``io_r``.
+    """
+    one, tot = io_one.as_dict(), io_r.as_dict()
+    r = int(n_replicas)
+    if r < 1:
+        raise ValueError(f"n_replicas must be >= 1, got {r}")
+    if r == 1:
+        if one != tot:
+            raise ValueError("R=1 bills differ; same run required")
+        return [{k: v for k, v in one.items() if k != "mn_iops"}]
+    for f in ("writes", "cas", "faa", "retries", "repair_cas"):
+        if tot[f] != r * one[f]:
+            raise ValueError(
+                f"replicated bill violates x{r} write fan-out on '{f}': "
+                f"{tot[f]} != {r} * {one[f]}")
+    for f in ("reads", "cn_msgs", "combined", "executed", "orphan_windows"):
+        if tot[f] != one[f]:
+            raise ValueError(
+                f"replicated bill changes read/observable field '{f}': "
+                f"{tot[f]} != {one[f]} (reads bill to one replica)")
+    wr_bytes, rem = divmod(tot["mn_bytes"] - one["mn_bytes"], r - 1)
+    if rem or wr_bytes < 0 or wr_bytes > one["mn_bytes"]:
+        raise ValueError(
+            f"replicated byte bill inconsistent: mn_bytes {one['mn_bytes']} "
+            f"-> {tot['mn_bytes']} is not ro + {r}*wr")
+    secondary = {
+        "reads": 0, "writes": one["writes"], "cas": one["cas"],
+        "faa": one["faa"], "cn_msgs": 0, "mn_bytes": wr_bytes,
+        "retries": one["retries"], "combined": 0, "executed": 0,
+        "repair_cas": one["repair_cas"], "orphan_windows": 0,
+    }
+    primary = {k: v for k, v in one.items() if k != "mn_iops"}
+    primary["cn_msgs"] = tot["cn_msgs"]
+    primary["combined"] = tot["combined"]
+    primary["executed"] = tot["executed"]
+    primary["orphan_windows"] = tot["orphan_windows"]
+    return [primary] + [dict(secondary) for _ in range(r - 1)]
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class OpBatch:
@@ -170,6 +230,13 @@ class EngineConfig:
     lock_bytes: int = 16              # lock entry: 60b tail + 64b epoch + 4b version
     index_read_iops: int = 1          # per-op index I/O (pointer array: 1 READ)
     index_read_bytes: int = 8
+    # SNAPSHOT client-centric replication degree (FUSEE; DESIGN.md §13).
+    # Every write-class verb (WRITE/CAS/FAA, retries, §4.6 repair break-CAS)
+    # fans out to all R replica MNs from the client; reads bill to one
+    # replica.  R=1 compiles to the byte-identical pre-replication program
+    # (the scaling block is a static Python branch), so the replica axis is
+    # provably zero-cost when off (tests/test_replication.py).
+    n_replicas: int = 1
     # CIDER contention-aware parameters (§4.3, Fig 15)
     initial_credit: int = 36
     hotness_threshold: int = 2

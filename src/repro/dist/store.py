@@ -41,7 +41,8 @@ from repro.core.types import (NULL_PTR, EngineConfig, IOMetrics, OpBatch,
 
 __all__ = ["shard_extents", "sharded_store_init", "sharded_populate",
            "sharded_store_view", "apply_batch_sharded", "run_windows_sharded",
-           "run_windows_sharded_traced", "failover_reown", "host_rehome"]
+           "run_windows_sharded_traced", "failover_reown", "promote_replica",
+           "host_rehome"]
 
 _NONE = jnp.int32(-1)
 
@@ -153,6 +154,54 @@ def failover_reown(cfg: EngineConfig, n_from: int, state: StoreState,
                         + lost_live * cfg.value_bytes),
     }
     return new, recovery_io
+
+
+def promote_replica(cfg: EngineConfig, state: StoreState,
+                    survivors: tuple[int, ...], dead_replicas: tuple[int, ...],
+                    ) -> tuple[StoreState, dict]:
+    """Promote a surviving replica MN after replica deaths (DESIGN.md §13).
+
+    SNAPSHOT client-centric replication keeps every replica's logical store
+    identical — each acked write hit all R replicas before completing, and
+    window-granular execution means no write is mid-fan-out at a window
+    boundary — so promotion moves **no data**: clients drop the dead
+    replicas from their replica lists and re-point reads at the lowest
+    surviving replica.  What failover must still do is re-run the §4.6
+    orphaned-lock repair against the promoted replica: every lock the CN
+    liveness plane has stranded (``StoreState.stranded``) was recorded
+    against the old primary's lock words, so the promoted replica's copies
+    are re-armed with one break CAS each, and the whole lock plane is swept
+    (one lock-entry READ per slot) to certify that no acquisition was
+    mid-fan-out when the replica died.
+
+    Control-plane only: the returned state is the input state (the lazy
+    in-band repair contract is untouched — the next locker of a stranded
+    slot still breaks and bills it), and the sweep's bill is returned as a
+    ``recovery_io`` dict kept OUT of ``IOMetrics`` — which is exactly why
+    the post-failover data-plane bill is bit-equal to a plain segmented run
+    that swaps ``EngineConfig.n_replicas`` at the crash window (asserted in
+    ``benchmarks/replication.py`` and ``tests/test_replication.py``).
+    """
+    dead = sorted(dead_replicas)
+    if not survivors:
+        raise ValueError("promote_replica: no surviving replica")
+    if set(dead) & set(survivors):
+        raise ValueError(f"replicas {sorted(set(dead) & set(survivors))} "
+                         f"listed both dead and surviving")
+    stranded = int(np.asarray(state.stranded).sum())
+    recovery_io = {
+        "dead_replicas": dead,
+        "survivors": sorted(survivors),
+        "promoted": min(survivors),
+        # one lock-entry READ per slot on the promoted replica (the
+        # mid-fan-out certification sweep) ...
+        "promote_reads": cfg.n_slots,
+        "promote_bytes": cfg.n_slots * cfg.lock_bytes,
+        # ... plus one break CAS re-arming each CN-stranded lock on every
+        # surviving replica's copy of the word
+        "repair_rearm_cas": stranded * len(survivors),
+    }
+    return state, recovery_io
 
 
 def _psum_results(res: Results, axis: str) -> Results:

@@ -14,18 +14,28 @@ Three planes, one failure model (DESIGN.md §8):
   slot partitions onto survivors; :mod:`repro.recovery.orchestrator`
   splits a run around failover events and asserts nothing about the
   data-plane bill changes.
+* **MN replication** (DESIGN.md §13) — :class:`MNLiveness` masks the
+  *memory-node replicas* instead of the CNs; ``run_recovery_replicated``
+  splits the stream at replica deaths, drops ``EngineConfig.n_replicas``
+  to the survivor count per segment, and ``dist.store.promote_replica``
+  re-arms the §4.6 repair against the promoted replica between segments.
 
 Scenario generators live in :mod:`repro.workloads.recovery`; the committed
-benchmark is ``BENCH_recovery.json`` (``benchmarks/recovery.py``).
+benchmarks are ``BENCH_recovery.json`` (``benchmarks/recovery.py``) and
+``BENCH_replication.json`` (``benchmarks/replication.py``).
 """
-from repro.recovery.liveness import (LivenessSchedule, always_alive, crash,
-                                     elastic, rolling)
+from repro.recovery.liveness import (LivenessSchedule, MNLiveness,
+                                     always_alive, crash, elastic,
+                                     mn_always_alive, mn_crash, rolling)
 from repro.recovery.orchestrator import (FailoverEvent, RecoveryRun,
-                                         run_recovery, run_recovery_sharded,
-                                         slice_stream, time_to_repair)
+                                         run_recovery,
+                                         run_recovery_replicated,
+                                         run_recovery_sharded, slice_stream,
+                                         time_to_repair)
 
 __all__ = [
     "LivenessSchedule", "always_alive", "crash", "rolling", "elastic",
-    "FailoverEvent", "RecoveryRun", "run_recovery", "run_recovery_sharded",
-    "slice_stream", "time_to_repair",
+    "MNLiveness", "mn_always_alive", "mn_crash",
+    "FailoverEvent", "RecoveryRun", "run_recovery", "run_recovery_replicated",
+    "run_recovery_sharded", "slice_stream", "time_to_repair",
 ]

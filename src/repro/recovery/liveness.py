@@ -19,6 +19,15 @@ lists).  Rejoin needs no special handling anywhere downstream: a returning
 CN simply starts issuing ops again (the store and the replicated credit
 table were never CN-local state).
 
+Memory-node liveness (replication, DESIGN.md §13): :class:`MNLiveness` is
+the same idea on the *memory* side — a ``(W, n_replicas)`` mask over the
+replica MNs a SNAPSHOT-replicated store writes to.  Unlike CNs, MN replicas
+are fail-stop with no rejoin (a returning replica would need an
+anti-entropy resync the cost model does not bill), and at least one replica
+must survive every window; the schedule's ``segments()`` are what
+``recovery.orchestrator.run_recovery_replicated`` splits the stream at,
+re-running each segment at the surviving replica count.
+
 DESIGN.md §8.1 (the liveness plane): (W, n_cns) alive-mask schedules with
 crash/rolling/elastic builders.
 """
@@ -29,7 +38,8 @@ from typing import Sequence
 
 import numpy as np
 
-__all__ = ["LivenessSchedule", "always_alive", "crash", "rolling", "elastic"]
+__all__ = ["LivenessSchedule", "always_alive", "crash", "rolling", "elastic",
+           "MNLiveness", "mn_always_alive", "mn_crash"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +89,79 @@ class LivenessSchedule:
         """First window with a crash edge (None if the schedule has none)."""
         rows = np.flatnonzero(self.died().any(axis=1))
         return int(rows[0]) if rows.size else None
+
+
+@dataclasses.dataclass(frozen=True)
+class MNLiveness:
+    """Per-window *memory-node replica* liveness (DESIGN.md §13).
+
+    ``alive[w, r]``: replica MN ``r`` serves window ``w``.  Fail-stop with
+    no rejoin — a dead replica stays dead (rejoining would require an
+    anti-entropy resync the cost model does not bill) — and at least one
+    replica survives every window, both enforced at construction.  The CN
+    plane (:class:`LivenessSchedule`) rides the stream itself; this plane
+    rides the orchestrator, because a replica death changes the *engine
+    config* (``EngineConfig.n_replicas``) for every window after it.
+    """
+    alive: np.ndarray          # (W, n_replicas) bool
+
+    def __post_init__(self):
+        a = np.asarray(self.alive, bool)
+        if a.ndim != 2:
+            raise ValueError(f"alive must be (W, n_replicas), got {a.shape}")
+        if not a.any(axis=1).all():
+            raise ValueError("every window needs >= 1 surviving replica")
+        if (~a[:-1] & a[1:]).any():
+            raise ValueError("MN replicas are fail-stop: no rejoin")
+        object.__setattr__(self, "alive", a)
+
+    @property
+    def windows(self) -> int:
+        return self.alive.shape[0]
+
+    @property
+    def n_replicas(self) -> int:
+        return self.alive.shape[1]
+
+    def died(self) -> np.ndarray:
+        """(W, n_replicas) crash edges; row 0 all-False by convention."""
+        prev = np.vstack([self.alive[:1], self.alive[:-1]])
+        return prev & ~self.alive
+
+    def n_alive(self) -> np.ndarray:
+        return self.alive.sum(axis=1)
+
+    def survivors(self, window: int) -> tuple[int, ...]:
+        """Replica ids serving ``window``."""
+        return tuple(np.flatnonzero(self.alive[window]).tolist())
+
+    def first_crash_window(self) -> int | None:
+        rows = np.flatnonzero(self.died().any(axis=1))
+        return int(rows[0]) if rows.size else None
+
+    def segments(self) -> list[tuple[int, int, tuple[int, ...]]]:
+        """Constant-membership runs ``(lo, hi, survivors)`` covering
+        ``[0, W)`` — the split points ``run_recovery_replicated`` re-runs
+        the stream at, one ``EngineConfig.n_replicas`` per segment."""
+        out, lo = [], 0
+        for w in range(1, self.windows):
+            if self.died()[w].any():
+                out.append((lo, w, self.survivors(lo)))
+                lo = w
+        out.append((lo, self.windows, self.survivors(lo)))
+        return out
+
+
+def mn_always_alive(windows: int, n_replicas: int) -> MNLiveness:
+    return MNLiveness(np.ones((windows, n_replicas), bool))
+
+
+def mn_crash(windows: int, n_replicas: int, dead_replicas: Sequence[int],
+             at_window: int) -> MNLiveness:
+    """``dead_replicas`` fail-stop at ``at_window`` and never return."""
+    alive = np.ones((windows, n_replicas), bool)
+    alive[at_window:, list(dead_replicas)] = False
+    return MNLiveness(alive)
 
 
 def always_alive(windows: int, n_cns: int) -> LivenessSchedule:

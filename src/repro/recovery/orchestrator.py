@@ -40,7 +40,8 @@ from repro.dist import store as dstore
 from repro.launch.mesh import make_local_mesh
 
 __all__ = ["FailoverEvent", "RecoveryRun", "run_recovery",
-           "run_recovery_sharded", "slice_stream", "time_to_repair"]
+           "run_recovery_replicated", "run_recovery_sharded", "slice_stream",
+           "time_to_repair"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -139,6 +140,65 @@ def run_recovery_sharded(cfg: EngineConfig, n_shards: int, state: StoreState,
         io=jax.tree.map(cat, *ios) if len(ios) > 1 else ios[0],
         state=state, credits=credits, valid=_post_drop_valid(stream),
         n_shards=n_shards, recovery_io=recovery_io)
+
+
+def run_recovery_replicated(cfg: EngineConfig, state: StoreState,
+                            credits: CreditState, stream: WindowStream,
+                            mn: "object") -> RecoveryRun:
+    """Replicated-MN run with fail-stop replica deaths (DESIGN.md §13).
+
+    ``mn`` is a :class:`repro.recovery.liveness.MNLiveness` whose
+    ``n_replicas`` must equal ``cfg.n_replicas`` and whose ``windows`` must
+    match the stream.  The stream is split at ``mn.segments()`` — the same
+    segment-splitting machinery ``run_recovery_sharded`` uses for CN-side
+    shard death — and each segment runs single-device at that segment's
+    surviving replica count (``dataclasses.replace(cfg, n_replicas=...)``).
+    Between segments ``dist.store.promote_replica`` promotes the lowest
+    surviving replica and re-runs the §4.6 orphaned-lock repair against it,
+    billing the sweep into ``recovery_io`` (control-plane, OUT of
+    ``IOMetrics``).  The previous segment's last alive row threads through
+    (``prev_alive``), so a CN crash at the MN-failover boundary still
+    strands locks.
+
+    Because promotion moves no data, the concatenated per-window results
+    and data-plane bill are bit-equal to running the same segments directly
+    through ``run_windows`` with the ``n_replicas`` swap and no promotion —
+    the drop-mask reference ``benchmarks/replication.py`` and
+    ``tests/test_replication.py`` assert against.
+    """
+    w = stream.shape[0]
+    if mn.windows != w:
+        raise ValueError(f"MNLiveness covers {mn.windows} windows, "
+                         f"stream has {w}")
+    if mn.n_replicas != cfg.n_replicas:
+        raise ValueError(f"MNLiveness has {mn.n_replicas} replicas, "
+                         f"cfg.n_replicas={cfg.n_replicas}")
+    segs = mn.segments()
+    ress, ios, recovery_io = [], [], []
+    prev_alive = None
+    prev_survivors = segs[0][2]
+    for i, (lo, hi, survivors) in enumerate(segs):
+        if i > 0:
+            dead = tuple(sorted(set(prev_survivors) - set(survivors)))
+            state, rio = dstore.promote_replica(cfg, state, survivors, dead)
+            rio["window"] = lo
+            recovery_io.append(rio)
+        seg = slice_stream(stream, lo, hi)
+        seg_cfg = dataclasses.replace(cfg, n_replicas=len(survivors))
+        state, credits, res, io = runner.run_windows(
+            seg_cfg, state, credits, seg, io_per_window=True,
+            prev_alive=prev_alive)
+        prev_alive = seg.alive[-1]
+        prev_survivors = survivors
+        ress.append(res)
+        ios.append(io)
+    cat = lambda *xs: np.concatenate([np.asarray(x) for x in xs],  # noqa: E731
+                                     axis=0)
+    return RecoveryRun(
+        results=jax.tree.map(cat, *ress) if len(ress) > 1 else ress[0],
+        io=jax.tree.map(cat, *ios) if len(ios) > 1 else ios[0],
+        state=state, credits=credits, valid=_post_drop_valid(stream),
+        n_shards=1, recovery_io=recovery_io)
 
 
 def time_to_repair(io: IOMetrics, crash_window: int | None) -> dict:

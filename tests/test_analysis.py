@@ -15,7 +15,9 @@ import pytest
 from benchmarks.provenance import provenance
 from repro.analysis import ANALYSIS_VERSION, PASSES, analysis_provenance
 from repro.analysis import bill_lint, jaxpr_check, race_check
-from repro.analysis.race_check import ModelFlags, Scenario, explore
+from repro.analysis.race_check import (
+    ModelFlags, ReplScenario, Scenario, explore, explore_replicated,
+    repl_scenarios)
 from repro.core.types import OpKind, SyncMode
 
 # ---------------------------------------------------------------- plumbing
@@ -249,6 +251,46 @@ def test_race_check_crash_repair_is_safe():
         viols, states = explore(sc, allow_crash=True)
         assert viols == [], [str(v) for v in viols]
         assert states > 100   # crash branching actually explored
+
+
+def test_race_check_replicated_clean_on_real_machine():
+    # the full quick replicated space (DESIGN.md §13 client-centric
+    # replication, crash-at-any-step between primary CAS and fan-out)
+    # is clean under the REAL flags, and the crash branching is explored
+    n = states = 0
+    for sc in repl_scenarios(quick=True):
+        viols, s = explore_replicated(sc)
+        assert viols == [], (sc.describe(), [str(v) for v in viols])
+        n += 1
+        states += s
+    assert n >= 100 and states > 5_000
+
+
+def test_race_check_replicated_crash_leaves_repairable_divergence():
+    # a writer crashing between primary CAS and fan-out leaves the
+    # replicas divergent; the REAL reader must resolve max-version and
+    # roll the committed write forward — zero violations, and the crash
+    # branch is genuinely in the explored space
+    sc = ReplScenario(((OpKind.UPDATE, 0), (OpKind.SEARCH, 0)), (0,))
+    viols, states = explore_replicated(sc, allow_crash=True)
+    assert viols == [], [str(v) for v in viols]
+    no_crash_states = explore_replicated(sc, allow_crash=False)[1]
+    assert states > no_crash_states
+
+
+def test_race_check_detects_stale_replica_read():
+    # seeded bug: a read served from one arbitrary replica instead of
+    # max-version resolution — caught twice (oracle replay divergence +
+    # an explicit record naming the divergent replicas), and the
+    # interleaving alone exposes it even with crashes disabled
+    sc = ReplScenario(((OpKind.UPDATE, 0), (OpKind.SEARCH, 0)), (0,),
+                      flags=ModelFlags(stale_replica_read=True))
+    for allow_crash in (True, False):
+        viols, _ = explore_replicated(sc, allow_crash=allow_crash)
+        msgs = [v.message for v in viols]
+        assert any("stale-replica read" in m and "replicas diverge" in m
+                   for m in msgs), msgs
+        assert any("oracle replay diverges" in m for m in msgs), msgs
 
 
 def test_race_check_tick_conformance():

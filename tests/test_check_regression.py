@@ -1,10 +1,14 @@
 """Unit tests for the CI perf gate's pure check logic — synthetic dicts, no
 benchmark runs: the modeled-mops floor/ordering checks, the wall-clock
 floors (gated on backend provenance, DESIGN.md §10), the weak-scaling /
-open-loop floors (``check_scale``), and the markdown gate summary."""
+open-loop floors (``check_scale``), the replication-contract floors
+(``check_replication``, DESIGN.md §13), and the markdown gate summary."""
 from __future__ import annotations
 
-from benchmarks.check_regression import (check, check_scale, check_wall,
+import copy
+
+from benchmarks.check_regression import (check, check_replication,
+                                         check_scale, check_wall,
                                          summary_rows, write_summary)
 
 PROV = {"jax_backend": "cpu", "kernel_impl": "jnp", "kernel_interpret": False}
@@ -130,6 +134,106 @@ def test_scale_fails_on_lost_open_loop_tail_lead():
 def test_scale_missing_baseline_block_fails():
     fails = check_scale(_scale_json(), {}, 0.10)
     assert len(fails) == 1 and "_scale" in fails[0]
+
+
+def _repl_cell(reads=100, writes=10, cas=8, faa=2, retries=4, repair_cas=1,
+               mn_bytes=1000, r=1, **over):
+    """A consistent replication cell: write verbs xR, reads x1, bytes
+    ro + R*wr with ro=600, wr=400 at R=1."""
+    d = {"reads": reads, "writes": writes * r, "cas": cas * r, "faa": faa * r,
+         "cn_msgs": 5, "mn_bytes": 600 + r * (mn_bytes - 600), "retries":
+         retries * r, "combined": 3, "executed": writes, "repair_cas":
+         repair_cas * r, "orphan_windows": 0, "mn_iops": 0,
+         "modeled_mops": 10.0 / r, "modeled_p50_us": 50.0,
+         "modeled_p99_us": 120.0}
+    d["mn_iops"] = d["reads"] + d["writes"] + d["cas"] + d["faa"]
+    d.update(over)
+    return d
+
+
+def _repl_json():
+    out = {"config": {"fast": True}, "replicas": {}, "mn_crash": {"modes": {
+        m: {"modeled_mops": 6.0, "asserted_equal": True} for m in
+        ("OSYNC", "SPIN", "MCS", "CIDER")}}}
+    for r in (1, 2, 3):
+        cells = {m: _repl_cell(r=r) for m in ("OSYNC", "SPIN", "MCS",
+                                              "CIDER")}
+        out["replicas"][str(r)] = {"single": cells,
+                                   "sharded4": copy.deepcopy(cells)}
+    return out
+
+
+def _repl_engine():
+    return {"config": {"fast": True},
+            **{m: _repl_cell() for m in ("OSYNC", "SPIN", "MCS", "CIDER")}}
+
+
+def test_replication_passes_when_consistent():
+    assert check_replication(_repl_json(), _repl_engine()) == []
+
+
+def test_replication_fails_on_injected_cas_cost_omission():
+    """The acceptance check: an engine change that forgets the replicated
+    CAS fan-out (R>1 cells billing the R=1 CAS cost) must fail the gate."""
+    bad = _repl_json()
+    for m in bad["replicas"]["2"]["single"]:
+        bad["replicas"]["2"]["single"][m]["cas"] //= 2   # drop back to R=1
+    fails = check_replication(bad, _repl_engine())
+    assert len(fails) == 4
+    assert all("'cas'" in f and "x2 fan-out" in f for f in fails)
+
+
+def test_replication_fails_on_r1_drift():
+    """R=1 must reproduce the engine benchmark to the digit — any drift
+    means the replica axis is no longer a byte-identical no-op."""
+    bad = _repl_json()
+    bad["replicas"]["1"]["single"]["CIDER"]["mn_iops"] += 1
+    fails = check_replication(bad, _repl_engine())
+    assert any("byte-identical no-op" in f and "mn_iops" in f for f in fails)
+
+
+def test_replication_fails_on_read_fanout():
+    """Reads bill to ONE replica; xR reads would double-charge the model."""
+    bad = _repl_json()
+    bad["replicas"]["3"]["single"]["MCS"]["reads"] *= 3
+    fails = check_replication(bad, _repl_engine())
+    assert any("'reads'" in f and "one replica" in f for f in fails)
+
+
+def test_replication_fails_on_missing_failover_witness():
+    bad = _repl_json()
+    bad["mn_crash"]["modes"]["SPIN"]["asserted_equal"] = False
+    fails = check_replication(bad, _repl_engine())
+    assert len(fails) == 1 and "bit-equality witness" in fails[0]
+
+
+def test_replication_fails_on_size_mismatch():
+    """A fast replication JSON cannot be R=1-matched against a full-size
+    engine JSON — that must fail loudly, not diff garbage."""
+    eng = _repl_engine()
+    eng["config"]["fast"] = False
+    fails = check_replication(_repl_json(), eng)
+    assert len(fails) == 1 and "size mismatch" in fails[0]
+
+
+def test_summary_rows_include_replication_gates(tmp_path, monkeypatch):
+    actual = {"engine": {"OSYNC": 1.0, "SPIN": 1.0, "MCS": 1.0, "CIDER": 2.0}}
+    baseline = {"engine": {"CIDER": 2.0}}
+    recovery = {"scenarios": {}}
+    rows = summary_rows(actual, baseline, _repl_engine(), _scale_json(),
+                        recovery, 0.10, 0.50, replication=_repl_json())
+    by = {(r[0], r[1]): r[4] for r in rows}
+    assert by[("replication/R1", "bit-identity vs engine")] == "PASS"
+    assert by[("replication/R2", "xR write conservation")] == "PASS"
+    assert by[("replication/R3", "xR write conservation")] == "PASS"
+    assert by[("replication/mn_crash", "failover bit-equality")] == "PASS"
+    bad = _repl_json()
+    bad["replicas"]["2"]["single"]["CIDER"]["cas"] //= 2
+    rows = summary_rows(actual, baseline, _repl_engine(), _scale_json(),
+                        recovery, 0.10, 0.50, replication=bad)
+    by = {(r[0], r[1]): r[4] for r in rows}
+    assert by[("replication/R2", "xR write conservation")] == "FAIL"
+    assert by[("replication/R3", "xR write conservation")] == "PASS"
 
 
 def test_summary_rows_and_markdown_table(tmp_path, monkeypatch):

@@ -1,0 +1,306 @@
+"""Replication-axis contracts (DESIGN.md §13): the R=1 bit-identity
+regression suite (the replica fan-out must be a compile-time no-op at
+``n_replicas=1``, single-device AND on the 4-way mesh), property tests for
+MN crash/failover (random crash schedules at R in {2,3}: the post-failover
+store must replay against the oracle, the per-replica verb bill must
+conserve, and the orchestrated run must stay bit-equal to the segmented
+``n_replicas``-swap reference), and the MN-liveness plane's own invariants.
+
+The property tests run under Hypothesis when it is installed; otherwise a
+deterministic seeded grid over the same generator exercises the identical
+property function, so the suite loses breadth but not the contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import runner
+from repro.core.credits import credit_init
+from repro.core.engine import populate, store_init, store_view
+from repro.core.oracle import OracleStore
+from repro.core.sim import make_streams, run_sim
+from repro.core.simnet import SimParams
+from repro.core.types import (EngineConfig, IOMetrics, SyncMode,
+                              per_replica_bill)
+from repro.dist import store as dstore
+from repro.launch.mesh import make_local_mesh
+from repro.recovery import (MNLiveness, mn_always_alive, mn_crash,
+                            run_recovery_replicated, slice_stream)
+from repro.workloads.recovery import RECOVERY_SCENARIOS
+from repro.workloads.ycsb import WORKLOADS
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                     # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+MODES = [SyncMode.OSYNC, SyncMode.SPIN, SyncMode.MCS, SyncMode.CIDER]
+W, B, NK, NCN = 6, 64, 128, 8
+HEAP = NK + W * B          # 512: divisible by the 4-way mesh
+N_SHARDS = 4
+
+
+def _cfg(mode: SyncMode, r: int = 1) -> EngineConfig:
+    return EngineConfig(n_slots=NK, heap_slots=HEAP, mode=mode, n_replicas=r)
+
+
+def _scenario(seed: int, crash_window: int = 3):
+    ops, sched = RECOVERY_SCENARIOS["crash_storm"].generate(
+        W, B, NK, 16, NCN, seed=seed, crash_window=crash_window)
+    stream = runner.make_stream(ops.kinds, ops.keys, ops.values, n_cns=NCN,
+                                alive=sched.alive)
+    return ops, sched, stream
+
+
+def _run_single(cfg: EngineConfig, stream):
+    pk = np.arange(NK)
+    st_ = populate(cfg, store_init(cfg), pk, pk)
+    return runner.run_windows(cfg, st_, credit_init(256), stream,
+                              io_per_window=True)
+
+
+def _tree_equal(a, b, what: str):
+    for f in dataclasses.fields(a):
+        x, y = np.asarray(getattr(a, f.name)), np.asarray(getattr(b, f.name))
+        assert np.array_equal(x, y), f"{what}: {type(a).__name__}.{f.name}"
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: R=1 bit-identity — the replica axis must cost nothing at R=1
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", MODES)
+def test_r1_bit_identity_single_device(mode):
+    """An explicit ``n_replicas=1`` run (even with an absurd ``replica_rtt``
+    in the cost model) must produce the full Results+IOMetrics tree of the
+    default config — the fan-out block is a Python-level branch that never
+    enters the compiled program at R=1."""
+    ops, _, stream = _scenario(seed=11)
+    _, _, res0, io0 = _run_single(EngineConfig(n_slots=NK, heap_slots=HEAP,
+                                               mode=mode), stream)
+    ops, _, stream = _scenario(seed=11)
+    _, _, res1, io1 = _run_single(_cfg(mode, r=1), stream)
+    _tree_equal(res0, res1, f"{mode.name}/single Results")
+    _tree_equal(io0, io1, f"{mode.name}/single IOMetrics")
+    p0 = SimParams()
+    p1 = dataclasses.replace(SimParams(), n_replicas=1, replica_rtt=999)
+    lat0 = runner.modeled_latency(_cfg(mode), ops.kinds, res0, p0)
+    lat1 = runner.modeled_latency(_cfg(mode, r=1), ops.kinds, res1, p1)
+    np.testing.assert_array_equal(lat0, lat1)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_r1_bit_identity_sharded_mesh(mode):
+    """Same contract on the 4-way mesh: the sharded scan with an explicit
+    ``n_replicas=1`` config must match the default-config sharded bill."""
+    pk = np.arange(NK)
+    outs = []
+    for cfg in (EngineConfig(n_slots=NK, heap_slots=HEAP, mode=mode),
+                _cfg(mode, r=1)):
+        _, _, stream = _scenario(seed=13)
+        sst = dstore.sharded_populate(
+            cfg, N_SHARDS, dstore.sharded_store_init(cfg, N_SHARDS), pk, pk)
+        mesh = make_local_mesh(data=N_SHARDS)
+        outs.append(dstore.run_windows_sharded(cfg, mesh, sst,
+                                               credit_init(256), stream,
+                                               io_per_window=True))
+    _tree_equal(outs[0][2], outs[1][2], f"{mode.name}/sharded Results")
+    _tree_equal(outs[0][3], outs[1][3], f"{mode.name}/sharded IOMetrics")
+
+
+def test_r1_sim_path_tick_exact():
+    """Protocol-simulator side of the same contract: at ``n_replicas=1`` the
+    tick loop must be bit-identical no matter what ``replica_rtt`` says."""
+    spec = WORKLOADS["write-intensive"]
+    base = dict(n_lanes=64, ticks=2048, max_ops=256)
+    p0 = SimParams(**base)
+    p1 = SimParams(**base, n_replicas=1, replica_rtt=777)
+    for mode in (SyncMode.OSYNC, SyncMode.CIDER):
+        r0 = run_sim(p0, mode, make_streams(p0, spec, 512), 64)
+        r1 = run_sim(p1, mode, make_streams(p1, spec, 512), 64)
+        assert r0.throughput_mops == r1.throughput_mops
+        assert r0.p99_us == r1.p99_us
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: MN crash/failover property — oracle replay + bill conservation
+# ---------------------------------------------------------------------------
+
+def _sum_io(io: IOMetrics, lo: int, hi: int) -> IOMetrics:
+    return IOMetrics(**{f.name: int(np.asarray(getattr(io, f.name))[lo:hi]
+                                    .sum())
+                        for f in dataclasses.fields(IOMetrics)})
+
+
+def _check_mn_failover(mode: SyncMode, r: int, seed: int, mn: MNLiveness,
+                       cn_crash_window: int = 3) -> None:
+    """The satellite-2 property, shared by the Hypothesis and deterministic
+    paths: under any fail-stop MN schedule ``mn`` (R -> survivors), the
+    orchestrated failover run must (a) leave a store the oracle reproduces,
+    (b) bill each constant-membership segment exactly R_s x the R=1 write
+    bill / 1 x the read bill (``per_replica_bill`` accepts and re-sums it),
+    and (c) report the promotion sweep in ``recovery_io``, one entry per
+    crash edge."""
+    ops, sched, stream = _scenario(seed, crash_window=cn_crash_window)
+    cfg = _cfg(mode, r=r)
+    pk = np.arange(NK)
+    run = run_recovery_replicated(
+        cfg, populate(cfg, store_init(cfg), pk, pk), credit_init(256),
+        stream, mn)
+
+    # (a) the surviving replica serves a store the oracle agrees with
+    o = OracleStore()
+    o.populate(pk, pk)
+    kinds, keys, values = (np.asarray(ops.kinds), np.asarray(ops.keys),
+                           np.asarray(ops.values))
+    for w in range(W):
+        o.apply(kinds[w], keys[w], values[w], valid=run.valid[w])
+    ex_o, v_o = o.view(NK)
+    ex, v = store_view(run.state)
+    np.testing.assert_array_equal(np.asarray(ex), ex_o)
+    np.testing.assert_array_equal(np.where(ex_o, np.asarray(v), 0),
+                                  np.where(ex_o, v_o, 0))
+
+    # (b) per-replica conservation, segment by segment, against an R=1 run
+    _, _, stream1 = _scenario(seed, crash_window=cn_crash_window)
+    _, _, _, io1 = _run_single(_cfg(mode, r=1), stream1)
+    for lo, hi, survivors in mn.segments():
+        one = _sum_io(io1, lo, hi)
+        tot = _sum_io(run.io, lo, hi)
+        bills = per_replica_bill(one, tot, len(survivors))
+        assert len(bills) == len(survivors)
+        summed = {k: sum(b[k] for b in bills) for k in bills[0]}
+        assert summed == {k: v_ for k, v_ in tot.as_dict().items()
+                          if k != "mn_iops"}
+
+    # (c) one promotion per crash edge, billing the certification sweep
+    n_edges = int(mn.died().any(axis=1).sum())
+    assert len(run.recovery_io) == n_edges
+    for rio in run.recovery_io:
+        assert rio["promote_reads"] == NK
+        assert rio["promote_bytes"] == NK * cfg.lock_bytes
+        assert rio["promoted"] == min(rio["survivors"])
+
+
+DET_CASES = [
+    # (mode, R, seed, dead replicas, MN crash window)
+    (SyncMode.OSYNC, 2, 0, (1,), 2),
+    (SyncMode.SPIN, 2, 1, (0,), 4),
+    (SyncMode.MCS, 2, 2, (1,), 3),
+    (SyncMode.CIDER, 2, 3, (0,), 2),
+    (SyncMode.OSYNC, 3, 4, (1, 2), 3),
+    (SyncMode.SPIN, 3, 5, (2,), 2),
+    (SyncMode.MCS, 3, 6, (0, 1), 4),
+    (SyncMode.CIDER, 3, 7, (2,), 3),
+]
+
+
+@pytest.mark.parametrize("mode,r,seed,dead,at", DET_CASES)
+def test_mn_failover_oracle_and_conservation(mode, r, seed, dead, at):
+    _check_mn_failover(mode, r, seed, mn_crash(W, r, dead, at_window=at))
+
+
+@pytest.mark.parametrize("mode", [SyncMode.MCS, SyncMode.CIDER])
+def test_mn_failover_two_step_schedule(mode):
+    """R=3 losing one replica, then another: two promotions, three
+    segments, each at its own survivor count."""
+    alive = np.ones((W, 3), bool)
+    alive[2:, 2] = False
+    alive[4:, 0] = False
+    mn = MNLiveness(alive)
+    assert [s[2] for s in mn.segments()] == [(0, 1, 2), (0, 1), (1,)]
+    _check_mn_failover(mode, 3, seed=9, mn=mn)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 2**16), r=st.sampled_from([2, 3]),
+           at=st.integers(1, W - 1), mode=st.sampled_from(MODES),
+           data=st.data())
+    def test_mn_failover_property_hypothesis(seed, r, at, mode, data):
+        dead = data.draw(st.lists(st.integers(0, r - 1), min_size=1,
+                                  max_size=r - 1, unique=True))
+        _check_mn_failover(mode, r, seed,
+                           mn_crash(W, r, tuple(dead), at_window=at))
+
+
+# ---------------------------------------------------------------------------
+# the MN-liveness plane's own invariants
+# ---------------------------------------------------------------------------
+
+def test_mn_liveness_requires_a_survivor():
+    alive = np.ones((4, 2), bool)
+    alive[2:, :] = False
+    with pytest.raises(ValueError, match="surviving replica"):
+        MNLiveness(alive)
+
+
+def test_mn_liveness_forbids_rejoin():
+    alive = np.ones((4, 2), bool)
+    alive[1, 0] = False                      # down at 1, back at 2
+    with pytest.raises(ValueError, match="no rejoin"):
+        MNLiveness(alive)
+
+
+def test_mn_liveness_segments_cover_the_stream():
+    mn = mn_crash(8, 3, (2,), at_window=5)
+    assert mn.segments() == [(0, 5, (0, 1, 2)), (5, 8, (0, 1))]
+    assert mn.first_crash_window() == 5
+    assert mn_always_alive(8, 3).segments() == [(0, 8, (0, 1, 2))]
+    assert mn_always_alive(8, 3).first_crash_window() is None
+
+
+def test_run_recovery_replicated_validates_shapes():
+    _, _, stream = _scenario(seed=0)
+    cfg = _cfg(SyncMode.CIDER, r=2)
+    pk = np.arange(NK)
+    st_ = populate(cfg, store_init(cfg), pk, pk)
+    with pytest.raises(ValueError, match="windows"):
+        run_recovery_replicated(cfg, st_, credit_init(256), stream,
+                                mn_always_alive(W + 1, 2))
+    with pytest.raises(ValueError, match="replicas"):
+        run_recovery_replicated(cfg, st_, credit_init(256), stream,
+                                mn_always_alive(W, 3))
+
+
+def test_promote_replica_is_control_plane_only():
+    """Promotion never mutates the store and rejects nonsense memberships."""
+    cfg = _cfg(SyncMode.MCS, r=3)
+    pk = np.arange(NK)
+    st_ = populate(cfg, store_init(cfg), pk, pk)
+    st2, rio = dstore.promote_replica(cfg, st_, survivors=(0, 1),
+                                      dead_replicas=(2,))
+    assert st2 is st_
+    assert rio["promote_reads"] == NK
+    assert rio["promote_bytes"] == NK * cfg.lock_bytes
+    assert rio["repair_rearm_cas"] == 0      # nothing stranded
+    with pytest.raises(ValueError, match="no surviving"):
+        dstore.promote_replica(cfg, st_, survivors=(), dead_replicas=(0,))
+    with pytest.raises(ValueError, match="both dead and surviving"):
+        dstore.promote_replica(cfg, st_, survivors=(0, 1),
+                               dead_replicas=(1,))
+
+
+def test_promote_replica_rearms_stranded_locks():
+    """A CN crash that leaves locks stranded at the MN-failover boundary
+    must surface in the re-arm bill (one break CAS per survivor copy)."""
+    ops, sched, stream = _scenario(seed=2, crash_window=2)
+    cfg = _cfg(SyncMode.MCS, r=2)
+    pk = np.arange(NK)
+    # run only the pre-failover prefix so the strands are live at the cut
+    seg = slice_stream(stream, 0, 3)
+    st_, _, _, io = runner.run_windows(cfg, populate(cfg, store_init(cfg),
+                                                     pk, pk),
+                                       credit_init(256), seg,
+                                       io_per_window=True)
+    stranded = int(np.asarray(st_.stranded).sum())
+    _, rio = dstore.promote_replica(cfg, st_, survivors=(0,),
+                                    dead_replicas=(1,))
+    assert rio["repair_rearm_cas"] == stranded * 1
+    if stranded == 0:
+        pytest.skip("seed left no stranded locks at the boundary")
